@@ -1,0 +1,11 @@
+"""Quickstart: train a small LM with the unified-memory policy in ~a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    # reduced tinyllama, AdamW moments placed in pinned_host (paper C1)
+    main(["--arch", "tinyllama-1.1b", "--reduced", "--steps", "30",
+          "--batch", "8", "--seq", "64", "--lr", "1e-3",
+          "--offload-optimizer"])

@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + greedy decode on the gemma3 family,
+with the KV cache optionally placed in host memory (unified address space).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "gemma3-1b", "--reduced", "--batch", "4",
+          "--prompt-len", "32", "--gen", "32"])
+    main(["--arch", "recurrentgemma-9b", "--reduced", "--batch", "4",
+          "--prompt-len", "32", "--gen", "32", "--offload-kv"])

@@ -1,0 +1,95 @@
+"""DIA (diagonal-offset) sparse matrix over a structured grid.
+
+This is the TPU adaptation of OpenFOAM's lduMatrix (DESIGN.md §2): the
+face-list gather/scatter Amul becomes 7 shifted-vector FMAs. Coefficients
+are stored per cell: ``diag [nx,ny,nz]`` and ``off [6, nx,ny,nz]`` where
+``off[f]`` multiplies the neighbor in ``grid.NEIGHBORS[f]``; entries for
+non-existent (boundary) neighbors are zero.
+
+``repro.kernels.stencil_spmv`` provides the Pallas kernel for ``amul``;
+``amul_ref`` here is the jnp oracle (and the default implementation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cfd.grid import Grid, NEIGHBORS, shift
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DiaMatrix:
+    diag: jax.Array              # [nx,ny,nz]
+    off: jax.Array               # [6,nx,ny,nz]
+
+    def tree_flatten(self):
+        return (self.diag, self.off), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @property
+    def shape3(self):
+        return self.diag.shape
+
+    def transpose(self) -> "DiaMatrix":
+        """A^T: off[f] becomes the opposite face's coefficient, shifted."""
+        new_off = []
+        for f, (ax, d) in enumerate(NEIGHBORS):
+            g = f + 1 if f % 2 == 0 else f - 1        # opposite face index
+            new_off.append(shift(self.off[g], ax, d))
+        return DiaMatrix(self.diag, jnp.stack(new_off))
+
+
+def amul_ref(A: DiaMatrix, x: jax.Array) -> jax.Array:
+    """y = A x  — 7 shifted FMAs, no gathers (pure-jnp oracle)."""
+    y = A.diag * x
+    for f, (ax, d) in enumerate(NEIGHBORS):
+        y = y + A.off[f] * shift(x, ax, d)
+    return y
+
+
+def amul(A: DiaMatrix, x: jax.Array, use_kernel: bool = False) -> jax.Array:
+    if use_kernel:
+        from repro.kernels.stencil_spmv import ops as K
+        return K.stencil_spmv(A.diag, A.off, x)
+    return amul_ref(A, x)
+
+
+def residual(A: DiaMatrix, x, b):
+    return b - amul_ref(A, x)
+
+
+def to_dense(A: DiaMatrix):
+    """O(N^2) dense form for small-grid tests only."""
+    import numpy as np
+    nx, ny, nz = A.diag.shape
+    N = nx * ny * nz
+    M = np.zeros((N, N), np.float64)
+    diag = np.asarray(A.diag, np.float64)
+    off = np.asarray(A.off, np.float64)
+
+    def idx(i, j, k):
+        return (i * ny + j) * nz + k
+
+    for i in range(nx):
+        for j in range(ny):
+            for k in range(nz):
+                r = idx(i, j, k)
+                M[r, r] = diag[i, j, k]
+                for f, (ax, d) in enumerate(NEIGHBORS):
+                    ni, nj, nk = i, j, k
+                    if ax == 0:
+                        ni += d
+                    elif ax == 1:
+                        nj += d
+                    else:
+                        nk += d
+                    if 0 <= ni < nx and 0 <= nj < ny and 0 <= nk < nz:
+                        M[r, idx(ni, nj, nk)] = off[f, i, j, k]
+    return M

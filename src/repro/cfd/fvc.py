@@ -1,0 +1,29 @@
+"""Explicit finite-volume operators (fvc::) — gradients and divergence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.cfd.grid import Grid, NEIGHBORS, interior_mask, shift
+
+
+def grad(grid: Grid, p):
+    """Cell-centered gradient, central differences, one-sided at walls."""
+    out = []
+    for ax in range(3):
+        h = grid.h[ax]
+        m_lo = interior_mask(grid, ax, -1)
+        m_hi = interior_mask(grid, ax, +1)
+        lo = shift(p, ax, -1)
+        hi = shift(p, ax, +1)
+        both = (m_lo * m_hi) > 0
+        # central where both neighbors exist; one-sided at boundaries
+        g = jnp.where(both, (hi - lo) / (2 * h),
+                      jnp.where(m_lo > 0, (p - lo) / h,
+                                jnp.where(m_hi > 0, (hi - p) / h, 0.0)))
+        out.append(g)
+    return out
+
+
+def div_flux(grid: Grid, phi_faces):
+    """div of face fluxes (sum of signed fluxes / volume)."""
+    return jnp.sum(phi_faces, axis=0) / grid.vol

@@ -1,0 +1,190 @@
+"""Configuration schema for the repro framework.
+
+Every assigned architecture is expressed as a :class:`ModelConfig` — a purely
+declarative description (no jax imports at module scope) consumed by
+``repro.models.transformer`` to build the layer program, by
+``repro.launch.sharding`` to derive parameter/activation shardings, and by
+``repro.launch.dryrun`` to build ``input_specs()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer kinds understood by the layer program interpreter.
+#   attn        : global causal self-attention (RoPE or M-RoPE)
+#   attn_local  : sliding-window causal self-attention
+#   attn_enc    : bidirectional self-attention (encoder stacks)
+#   attn_xdec   : decoder layer with causal self-attn + cross-attention
+#   rglru       : RecurrentGemma recurrent block (conv1d + RG-LRU)
+#   rwkv        : RWKV6 time-mix (data-dependent decay linear attention)
+# Each layer is (mixer, mlp); mlp kind is per-config (dense swiglu / moe /
+# rwkv channel-mix) unless overridden by ``moe_every``.
+# ---------------------------------------------------------------------------
+
+ATTN_KINDS = ("attn", "attn_local", "attn_enc", "attn_xdec")
+RECURRENT_KINDS = ("rglru", "rwkv")
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                     # per-expert hidden size
+    shared_expert_ff: int = 0     # 0 = no shared expert
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPolicy:
+    """The paper's unified-memory policy (C1/C4) applied to the LM stack.
+
+    ``offload_optimizer``: place AdamW moments in ``pinned_host`` memory.
+    ``offload_kv_spill``: serve-time KV pages beyond ``kv_hot_window`` may be
+    placed in host memory (unified address space; compute follows data).
+    ``pool_min_elems``: Umpire-style pooling threshold (paper: 5K elements).
+    """
+    offload_optimizer: bool = False
+    offload_kv_spill: bool = False
+    kv_hot_window: int = 8192
+    pool_min_elems: int = 5120
+    target_cutoff: int = 16384    # TARGET_CUT_OFF analogue for TargetDispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None        # default: d_model // n_heads
+    # --- layer pattern -----------------------------------------------------
+    # cycle of mixer kinds, tiled (and truncated) to n_layers.
+    layer_cycle: Tuple[str, ...] = ("attn",)
+    window: int = 0                       # sliding window for attn_local
+    # --- MoE ----------------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1                    # MoE mlp on layers where i % moe_every == moe_offset
+    moe_offset: int = 0
+    # --- embeddings / head --------------------------------------------------
+    tie_embeddings: bool = True
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None   # qwen2-vl M-RoPE
+    # --- enc-dec (whisper) --------------------------------------------------
+    n_enc_layers: int = 0                 # >0 => encoder-decoder
+    enc_len: int = 1500                   # stub frontend frame count
+    # --- recurrent (rwkv / rglru) -------------------------------------------
+    rnn_width: int = 0                    # RG-LRU recurrence width (0 = d_model)
+    conv_width: int = 4                   # RG-LRU temporal conv
+    # --- numerics ------------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # --- runtime policy -------------------------------------------------------
+    memory: MemoryPolicy = dataclasses.field(default_factory=MemoryPolicy)
+    # --- provenance -----------------------------------------------------------
+    source: str = ""
+
+    # ----- derived -----------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        reps = -(-self.n_layers // len(self.layer_cycle))
+        return tuple((self.layer_cycle * reps)[: self.n_layers])
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.moe is not None and (i % self.moe_every) == self.moe_offset
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if no layer needs an unbounded-length KV cache."""
+        return all(k in RECURRENT_KINDS or k == "attn_local" for k in self.layer_kinds)
+
+    @property
+    def n_params(self) -> int:
+        """Analytic parameter count (used for 6ND roofline term)."""
+        d, v, hd = self.d_model, self.vocab, self.hd
+        emb = v * d if self.tie_embeddings else 2 * v * d
+        total = emb
+        for i, kind in enumerate(self.layer_kinds):
+            if kind in ATTN_KINDS:
+                qk = d * self.n_heads * hd + d * self.n_kv_heads * hd * 2
+                o = self.n_heads * hd * d
+                total += qk + o
+                if kind == "attn_xdec":      # cross-attention too
+                    total += qk + o
+            elif kind == "rglru":
+                w = self.rnn_width or d
+                total += 2 * d * w + w * d + w * self.conv_width + 3 * w
+            elif kind == "rwkv":
+                total += 4 * d * self.n_heads * self.hd + self.n_heads * self.hd * d
+                total += 6 * 32 * d  # lora-style ddlerp adapters (approx)
+            if self.is_moe_layer(i):
+                m = self.moe
+                total += d * m.n_experts                      # router
+                total += m.n_experts * 3 * d * m.d_ff         # experts
+                if m.shared_expert_ff:
+                    total += 3 * d * m.shared_expert_ff
+            elif kind == "rwkv":
+                total += 2 * d * int(3.5 * d)                # channel-mix
+            else:
+                total += 3 * d * self.d_ff                   # swiglu
+            total += 2 * d                                    # norms
+        if self.n_enc_layers:
+            per = 2 * (d * self.n_heads * hd + d * self.n_kv_heads * hd) + 3 * d * self.d_ff + 2 * d
+            total += self.n_enc_layers * per
+        return int(total)
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if self.moe is None:
+            return self.n_params
+        m = self.moe
+        full_moe = 0
+        active_moe = 0
+        for i in range(self.n_layers):
+            if self.is_moe_layer(i):
+                full_moe += m.n_experts * 3 * self.d_model * m.d_ff
+                active_moe += m.top_k * 3 * self.d_model * m.d_ff
+        return self.n_params - full_moe + active_moe
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell (assignment: 4 per arch)."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES = (
+    ShapeSpec("train_4k", 4096, 256, "train"),
+    ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32768, 128, "decode"),
+    ShapeSpec("long_500k", 524288, 1, "decode"),
+)
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic-capable archs."""
+    if shape.name == "long_500k":
+        ok = any(k in RECURRENT_KINDS or k == "attn_local" for k in cfg.layer_kinds)
+        if not ok:
+            return False, "long_500k skipped: pure full-attention arch (see DESIGN.md)"
+    return True, ""

@@ -1,0 +1,11 @@
+"""Llama 3.2 3B — small llama3 [hf:meta-llama/Llama-3.2-3B]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b", family="dense",
+    n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=128256,
+    layer_cycle=("attn",), rope_theta=500000.0,
+    tie_embeddings=True,
+    source="hf:meta-llama/Llama-3.2-3B",
+)

@@ -1,0 +1,11 @@
+"""Qwen2.5 32B — GQA with QKV bias [hf:Qwen/Qwen2.5-32B]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=27648, vocab=152064,
+    layer_cycle=("attn",), qkv_bias=True, rope_theta=1e6,
+    tie_embeddings=False,
+    source="hf:Qwen/Qwen2.5-32B",
+)

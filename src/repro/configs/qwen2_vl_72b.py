@@ -1,0 +1,17 @@
+"""Qwen2-VL 72B backbone — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+The vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings merged into the token stream, plus 3-component
+M-RoPE position ids.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=29568, vocab=152064,
+    layer_cycle=("attn",),
+    qkv_bias=True, tie_embeddings=False, rope_theta=1e6,
+    mrope_sections=(16, 24, 24),
+    source="arXiv:2409.12191; hf:Qwen/Qwen2-VL-72B",
+)

@@ -1,0 +1,55 @@
+"""Registry of assigned architectures (+ the paper's own CFD case).
+
+Each ``src/repro/configs/<id>.py`` exposes ``CONFIG``; this module collects
+them. ``--arch <id>`` everywhere resolves through :func:`get_config`.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+ARCH_IDS = (
+    "rwkv6_7b",
+    "qwen2_vl_72b",
+    "recurrentgemma_9b",
+    "llama3_2_3b",
+    "tinyllama_1_1b",
+    "gemma3_1b",
+    "qwen2_5_32b",
+    "llama4_scout_17b_a16e",
+    "qwen3_moe_30b_a3b",
+    "whisper_large_v3",
+)
+
+# assignment ids use dashes; module names use underscores
+ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+ALIASES.update({
+    "rwkv6-7b": "rwkv6_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "llama3.2-3b": "llama3_2_3b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "gemma3-1b": "gemma3_1b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "whisper-large-v3": "whisper_large_v3",
+})
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch: str) -> ModelConfig:
+    key = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    if key not in _cache:
+        if key not in ARCH_IDS:
+            raise KeyError(f"unknown arch {arch!r}; known: {sorted(ALIASES)}")
+        mod = importlib.import_module(f"repro.configs.{key}")
+        _cache[key] = mod.CONFIG
+    return _cache[key]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,17 @@
+"""Whisper large-v3 backbone — encoder-decoder; conv/mel frontend is a STUB
+(``input_specs()`` provides precomputed frame embeddings) [arXiv:2212.04356].
+
+The assignment lists 32L; Whisper large has 32 encoder + 32 decoder layers.
+We implement both stacks (n_enc_layers=32, n_layers=32 decoder layers).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="audio",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20, head_dim=64,
+    d_ff=5120, vocab=51866,
+    layer_cycle=("attn_xdec",),
+    n_enc_layers=32, enc_len=1500,
+    tie_embeddings=True,
+    source="arXiv:2212.04356; hf:openai/whisper-large-v3",
+)

@@ -1,0 +1,15 @@
+"""The paper's contribution as a first-class runtime:
+
+C1 unified memory  -> repro.core.umem       (MemSpace, UnifiedArena, placement)
+C2 incremental     -> repro.core.ledger     (offload_region, coverage)
+C3 adaptive switch -> repro.core.dispatch   (TargetDispatch / TARGET_CUT_OFF)
+C4 memory pooling  -> repro.core.pool       (HostStagingPool, DeviceBufferPool)
+§5 measurement     -> repro.core.executors  (unified / discrete / host)
+"""
+from repro.core.dispatch import TargetDispatch, offload, DEFAULT_CUTOFF
+from repro.core.executors import (DiscreteExecutor, HostExecutor,
+                                  UnifiedExecutor, make_executor)
+from repro.core.ledger import GLOBAL_LEDGER, Ledger, offload_region
+from repro.core.pool import (DeviceBufferPool, HostStagingPool,
+                             POOL_MIN_ELEMS, PoolStats)
+from repro.core.umem import MemSpace, UnifiedArena, place, tree_place

@@ -1,0 +1,106 @@
+"""Adaptive host/device dispatch — the ``if(target: n > TARGET_CUT_OFF)``
+OpenMP clause (paper C3, listings 4-6) as a JAX combinator.
+
+The same function is compiled twice — once pinned to the host CPU backend,
+once for the accelerator backend — and each call is routed by problem size.
+On an APU (and on our CPU container) switching sides is nearly free because
+no data movement is implied; on a discrete system the runtime would charge
+staging, which is exactly what the executors in ``repro.core.executors``
+measure.
+
+``calibrate()`` reproduces the paper's empirical choice of TARGET_CUT_OFF by
+timing both executables over a size ladder and picking the crossover.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+DEFAULT_CUTOFF = 16384
+
+
+def _default_size(args, kwargs) -> int:
+    for a in jax.tree.leaves((args, kwargs)):
+        if hasattr(a, "size"):
+            return int(a.size)
+    return 0
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    host_calls: int = 0
+    device_calls: int = 0
+    host_elems: int = 0
+    device_elems: int = 0
+
+    @property
+    def offload_fraction(self) -> float:
+        tot = self.host_elems + self.device_elems
+        return self.device_elems / tot if tot else 0.0
+
+
+class TargetDispatch:
+    """``TargetDispatch(f, cutoff)(x)`` == OpenMP
+    ``target teams distribute parallel for if(target: x.size > cutoff)``."""
+
+    def __init__(self, fn: Callable, cutoff: int = DEFAULT_CUTOFF,
+                 size_fn: Callable = None, name: Optional[str] = None):
+        self.name = name or getattr(fn, "__name__", "region")
+        self.cutoff = cutoff
+        self.size_fn = size_fn or _default_size
+        self._jitted = jax.jit(fn)
+        self._host_dev = jax.devices("cpu")[0]
+        accel = [d for d in jax.devices() if d.platform != "cpu"]
+        self._accel_dev = accel[0] if accel else jax.devices()[0]
+        self.stats = DispatchStats()
+
+    def _run_on(self, device, args, kwargs):
+        with jax.default_device(device):
+            return self._jitted(*args, **kwargs)
+
+    def __call__(self, *args, **kwargs):
+        n = self.size_fn(args, kwargs)
+        if n > self.cutoff:
+            self.stats.device_calls += 1
+            self.stats.device_elems += n
+            return self._run_on(self._accel_dev, args, kwargs)
+        self.stats.host_calls += 1
+        self.stats.host_elems += n
+        return self._run_on(self._host_dev, args, kwargs)
+
+    # ------------------------------------------------------------------
+    def calibrate(self, make_args: Callable[[int], tuple],
+                  sizes: Sequence[int] = (256, 1024, 4096, 16384, 65536),
+                  reps: int = 20) -> int:
+        """Time host vs device executables per size; set cutoff = crossover."""
+        crossover = self.cutoff
+        for n in sorted(sizes):
+            args = make_args(n)
+            ts = {}
+            for dev_name, dev in (("host", self._host_dev),
+                                  ("dev", self._accel_dev)):
+                r = self._run_on(dev, args, {})
+                jax.block_until_ready(r)
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    r = self._run_on(dev, args, {})
+                jax.block_until_ready(r)
+                ts[dev_name] = (time.perf_counter() - t0) / reps
+            if ts["dev"] < ts["host"]:
+                crossover = n
+                break
+        else:
+            crossover = max(sizes) + 1
+        self.cutoff = crossover
+        return crossover
+
+
+def offload(fn=None, *, cutoff: int = DEFAULT_CUTOFF, size_fn=None, name=None):
+    """Decorator form: the one-line directive of listings 4-6."""
+    def wrap(f):
+        return TargetDispatch(f, cutoff=cutoff, size_fn=size_fn, name=name)
+    return wrap(fn) if fn is not None else wrap

@@ -1,0 +1,123 @@
+"""Incremental-acceleration ledger (paper C2, Figs 2 & 4).
+
+The paper's porting method: walk a production code region by region, add one
+directive per parallelizable loop, and track how much of a time-step executes
+on the device. This module is that bookkeeping: every ``@offload_region`` is
+registered; executors report where each call actually ran and how much
+staging it cost; ``coverage_report()`` reproduces the Fig 2 (partial,
+PETSc-style) vs Fig 4 (directive, near-total) comparison.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class RegionRecord:
+    name: str
+    offloaded: bool = True              # does this region carry a directive?
+    calls: int = 0
+    device_calls: int = 0
+    host_calls: int = 0
+    compute_s: float = 0.0
+    staging_s: float = 0.0              # discrete-emulation copy time
+    staging_bytes: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.staging_s
+
+
+class Ledger:
+    def __init__(self, name: str = "default"):
+        self.name = name
+        self.regions: Dict[str, RegionRecord] = {}
+
+    def region(self, name: str, offloaded: bool = True) -> RegionRecord:
+        if name not in self.regions:
+            self.regions[name] = RegionRecord(name=name, offloaded=offloaded)
+        return self.regions[name]
+
+    def record(self, name: str, *, device: bool, compute_s: float,
+               staging_s: float = 0.0, staging_bytes: int = 0,
+               offloaded: bool = True) -> None:
+        r = self.region(name, offloaded)
+        r.calls += 1
+        r.device_calls += int(device)
+        r.host_calls += int(not device)
+        r.compute_s += compute_s
+        r.staging_s += staging_s
+        r.staging_bytes += staging_bytes
+
+    def reset_timings(self) -> None:
+        for r in self.regions.values():
+            r.calls = r.device_calls = r.host_calls = 0
+            r.compute_s = r.staging_s = 0.0
+            r.staging_bytes = 0
+
+    # ------------------------------------------------------------------
+    def coverage_report(self) -> dict:
+        total = sum(r.total_s for r in self.regions.values())
+        dev = sum(r.compute_s for r in self.regions.values()
+                  if r.offloaded and r.device_calls)
+        staging = sum(r.staging_s for r in self.regions.values())
+        return {
+            "regions": len(self.regions),
+            "offloaded_regions": sum(1 for r in self.regions.values()
+                                     if r.offloaded),
+            "total_s": total,
+            "device_compute_s": dev,
+            "staging_s": staging,
+            "device_fraction": dev / total if total else 0.0,
+            "staging_fraction": staging / total if total else 0.0,  # Fig 6
+        }
+
+    def table(self) -> List[dict]:
+        return [dataclasses.asdict(r) for r in self.regions.values()]
+
+
+GLOBAL_LEDGER = Ledger()
+
+
+@contextlib.contextmanager
+def timed_region(ledger: Ledger, name: str, device: bool = True,
+                 offloaded: bool = True):
+    t0 = time.perf_counter()
+    yield
+    ledger.record(name, device=device, offloaded=offloaded,
+                  compute_s=time.perf_counter() - t0)
+
+
+def offload_region(name: Optional[str] = None, *, offloaded: bool = True,
+                   ledger: Optional[Ledger] = None):
+    """Mark a function as one OpenMP-directive-sized region. The returned
+    wrapper is jitted and self-times into the ledger; executors can re-route
+    it (host/device/staged) without touching the function body — the
+    "one line per loop" porting experience of listings 4-6."""
+    ldg = ledger or GLOBAL_LEDGER
+
+    def wrap(fn: Callable):
+        jfn = jax.jit(fn)
+        rname = name or getattr(fn, "__name__", "region")
+        ldg.region(rname, offloaded)
+
+        def runner(*args, **kwargs):
+            t0 = time.perf_counter()
+            out = jfn(*args, **kwargs)
+            jax.block_until_ready(out)
+            ldg.record(rname, device=offloaded, offloaded=offloaded,
+                       compute_s=time.perf_counter() - t0)
+            return out
+
+        runner.__name__ = rname
+        runner.region_name = rname
+        runner.offloaded = offloaded
+        runner.jitted = jfn
+        return runner
+
+    return wrap

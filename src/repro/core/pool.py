@@ -1,0 +1,170 @@
+"""Umpire-style pooled allocation (paper C4, §5).
+
+The paper pools every buffer larger than 5K elements and reuses allocations
+instead of alloc/free churn — on MI300A any allocator returns unified
+memory, so one pool serves both host and device code.
+
+Two pools here:
+
+* :class:`HostStagingPool` — mutable numpy staging buffers (checkpoint
+  serialization, data pipeline, discrete-executor staging). True in-place
+  reuse, size-class binned, hit/miss accounting. This is the direct Umpire
+  analogue.
+* :class:`DeviceBufferPool` — jax.Array free-lists keyed by
+  (shape, dtype, memory_kind) for serve-time KV pages and transient device
+  scratch; "reuse" in JAX means handing back an existing buffer whose storage
+  is recycled through donation in the consuming jitted function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+POOL_MIN_ELEMS = 5120            # the paper's "buffers larger than 5K elements"
+
+
+def _size_class(nbytes: int) -> int:
+    """Round up to the next power-of-two byte class (min 4 KiB)."""
+    c = 4096
+    while c < nbytes:
+        c <<= 1
+    return c
+
+
+class PooledArray(np.ndarray):
+    """ndarray subclass so the pool can attach backing-buffer metadata."""
+    _pool_raw = None
+    _pool_cls = 0
+
+
+@dataclasses.dataclass
+class PoolStats:
+    hits: int = 0
+    misses: int = 0
+    unpooled: int = 0
+    bytes_reused: int = 0
+    bytes_allocated: int = 0
+    high_water_bytes: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+
+class HostStagingPool:
+    def __init__(self, min_elems: int = POOL_MIN_ELEMS,
+                 max_bytes: Optional[int] = None):
+        self.min_elems = min_elems
+        self.max_bytes = max_bytes
+        self._free: Dict[int, List[bytearray]] = {}
+        self._lock = threading.Lock()
+        self._outstanding_bytes = 0
+        self.stats = PoolStats()
+
+    def acquire(self, shape: Tuple[int, ...], dtype) -> np.ndarray:
+        """A numpy view over a pooled backing buffer. Small buffers bypass
+        the pool (paper threshold)."""
+        dtype = np.dtype(dtype)
+        elems = int(np.prod(shape)) if shape else 1
+        nbytes = elems * dtype.itemsize
+        if elems < self.min_elems:
+            self.stats.unpooled += 1
+            return np.empty(shape, dtype)
+        cls = _size_class(nbytes)
+        with self._lock:
+            bucket = self._free.get(cls)
+            if bucket:
+                raw = bucket.pop()
+                self.stats.hits += 1
+                self.stats.bytes_reused += nbytes
+            else:
+                raw = bytearray(cls)
+                self.stats.misses += 1
+                self.stats.bytes_allocated += cls
+            self._outstanding_bytes += cls
+            self.stats.high_water_bytes = max(self.stats.high_water_bytes,
+                                              self._outstanding_bytes
+                                              + self._free_bytes_locked())
+        arr = np.frombuffer(raw, dtype=dtype, count=elems).reshape(shape) \
+            .view(PooledArray)
+        arr._pool_raw = raw                     # keep backing alive + findable
+        arr._pool_cls = cls
+        return arr
+
+    def release(self, arr: np.ndarray) -> None:
+        raw = getattr(arr, "_pool_raw", None)
+        if raw is None:
+            return
+        cls = arr._pool_cls
+        with self._lock:
+            self._free.setdefault(cls, []).append(raw)
+            self._outstanding_bytes -= cls
+            if self.max_bytes is not None:
+                self._trim_locked()
+
+    def _free_bytes_locked(self) -> int:
+        return sum(cls * len(v) for cls, v in self._free.items())
+
+    def _trim_locked(self) -> None:
+        total = self._free_bytes_locked()
+        for cls in sorted(self._free, reverse=True):
+            while total > self.max_bytes and self._free[cls]:
+                self._free[cls].pop()
+                total -= cls
+
+    @property
+    def free_bytes(self) -> int:
+        with self._lock:
+            return self._free_bytes_locked()
+
+
+class DeviceBufferPool:
+    """Free-lists of jax.Arrays keyed by (shape, dtype, memory_kind)."""
+
+    def __init__(self, min_elems: int = POOL_MIN_ELEMS):
+        import jax
+        self._jax = jax
+        self.min_elems = min_elems
+        self._free: Dict[tuple, list] = {}
+        self.stats = PoolStats()
+
+    def _key(self, shape, dtype, memory_kind):
+        return (tuple(shape), str(np.dtype(dtype)), memory_kind or "device")
+
+    def acquire(self, shape, dtype, memory_kind: Optional[str] = None):
+        import jax.numpy as jnp
+        elems = int(np.prod(shape)) if shape else 1
+        if elems < self.min_elems:
+            self.stats.unpooled += 1
+            return jnp.zeros(shape, dtype)
+        key = self._key(shape, dtype, memory_kind)
+        bucket = self._free.get(key)
+        if bucket:
+            self.stats.hits += 1
+            self.stats.bytes_reused += elems * np.dtype(dtype).itemsize
+            return bucket.pop()
+        self.stats.misses += 1
+        self.stats.bytes_allocated += elems * np.dtype(dtype).itemsize
+        buf = jnp.zeros(shape, dtype)
+        if memory_kind and memory_kind != "device":
+            d = self._jax.devices()[0]
+            sh = self._jax.sharding.SingleDeviceSharding(d, memory_kind=memory_kind)
+            buf = self._jax.device_put(buf, sh)
+        return buf
+
+    def release(self, buf) -> None:
+        try:
+            key = self._key(buf.shape, buf.dtype,
+                            getattr(buf.sharding, "memory_kind", None))
+        except Exception:
+            return
+        if int(np.prod(buf.shape) if buf.shape else 1) < self.min_elems:
+            return
+        self._free.setdefault(key, []).append(buf)
+
+
+GLOBAL_STAGING_POOL = HostStagingPool()

@@ -1,0 +1,88 @@
+"""Unified-memory abstraction (paper C1): one logical space, placement by
+policy.
+
+On MI300A the hardware gives a single physical memory; any pointer is valid
+on CPU cores and GPU CUs. On TPU the analogue is JAX *memory kinds*: every
+array lives in ``device`` (HBM) or ``pinned_host``/``unpinned_host`` (DRAM),
+addressable by the same program, with XLA streaming data between spaces when
+compute needs it. This module gives the rest of the framework a single
+placement API so application code never hard-codes a memory space — the
+paper's "no programming distinction between host and device memory" (§3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Optional
+
+import jax
+
+
+class MemSpace(enum.Enum):
+    DEVICE = "device"            # HBM
+    HOST = "pinned_host"         # DMA-able host DRAM
+    HOST_UNPINNED = "unpinned_host"
+
+    @property
+    def kind(self) -> str:
+        return self.value
+
+
+def supported_spaces(device=None) -> set:
+    d = device or jax.devices()[0]
+    try:
+        return {m.kind for m in d.addressable_memories()}
+    except Exception:                       # pragma: no cover
+        return {"device"}
+
+
+def place(x, space: MemSpace, device=None):
+    """Move one array to a memory space (no-op if already there)."""
+    d = device or jax.devices()[0]
+    if space.kind not in supported_spaces(d):
+        return x
+    sh = jax.sharding.SingleDeviceSharding(d, memory_kind=space.kind)
+    return jax.device_put(x, sh)
+
+
+def tree_place(tree, space: MemSpace, device=None):
+    return jax.tree.map(lambda x: place(x, space, device), tree)
+
+
+def space_of(x) -> Optional[str]:
+    try:
+        return x.sharding.memory_kind
+    except Exception:
+        return None
+
+
+def with_memory_kind(sharding: jax.sharding.Sharding, space: MemSpace):
+    """Rebind a NamedSharding to a memory kind (for jit in/out_shardings)."""
+    return sharding.with_memory_kind(space.kind)
+
+
+@dataclasses.dataclass
+class UnifiedArena:
+    """Two named spaces over the unified address map. The *discrete-memory
+    emulation* (benchmarks, Fig 6) stages data between the two with real
+    copies; the *unified* executor never calls :meth:`to_device`/:meth:`to_host`
+    — that asymmetry is the paper's measured effect."""
+    device: Any = None
+    host_space: MemSpace = MemSpace.HOST
+    device_space: MemSpace = MemSpace.DEVICE
+
+    def __post_init__(self):
+        self.device = self.device or jax.devices()[0]
+        sup = supported_spaces(self.device)
+        if self.host_space.kind not in sup:
+            self.host_space = self.device_space   # degrade gracefully
+
+    def to_device(self, tree):
+        return tree_place(tree, self.device_space, self.device)
+
+    def to_host(self, tree):
+        return tree_place(tree, self.host_space, self.device)
+
+    def bytes_of(self, tree) -> int:
+        return sum(x.nbytes for x in jax.tree.leaves(tree)
+                   if hasattr(x, "nbytes"))

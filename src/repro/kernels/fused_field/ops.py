@@ -1,0 +1,9 @@
+"""Jitted public wrappers for the fused-field Pallas kernel."""
+import jax
+
+from repro.kernels.fused_field import kernel as _k
+
+fused_axpy = jax.jit(_k.fused_axpy)
+fused_xpay = jax.jit(_k.fused_xpay)
+fused_mul = jax.jit(_k.fused_mul)
+fused_axpbypz = jax.jit(_k.fused_axpbypz)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused field macros."""
+import jax.numpy as jnp
+
+
+def fused_axpy(a, x, y):
+    return y + a * x
+
+
+def fused_xpay(a, x, y):
+    return x + a * y
+
+
+def fused_mul(x, y):
+    return x * y
+
+
+def fused_axpbypz(a, x, b, y, z):
+    return z + a * x + b * y

@@ -1,0 +1,8 @@
+"""Jitted public wrapper for the RWKV6 chunked-scan kernel."""
+from functools import partial
+
+import jax
+
+from repro.kernels.rwkv6_scan import kernel as _k
+
+rwkv6_scan = jax.jit(_k.rwkv6_scan, static_argnames=("chunk",))

@@ -1,0 +1,16 @@
+"""Oracles: sequential RWKV6 recurrence + the pure-JAX chunked form."""
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import rwkv_chunk, rwkv_ref_scan
+
+
+def rwkv6_scan(r, k, v, logw, u, chunk: int = 64):
+    B, T, H, hd = r.shape
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    return rwkv_ref_scan(r, k, v, logw, u, S0)
+
+
+def rwkv6_chunked(r, k, v, logw, u, chunk: int = 64):
+    B, T, H, hd = r.shape
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    return rwkv_chunk(r, k, v, logw, u, S0, chunk)

@@ -1,0 +1,157 @@
+"""Pallas kernel: 7-point DIA stencil SpMV (OpenFOAM lduMatrix::Amul on TPU).
+
+TPU adaptation (DESIGN.md §2): the unstructured LDU face-list gather/scatter
+becomes, on a structured grid, y[i] = d[i]*x[i] + sum_f off[f][i]*x[i+s_f]
+with six constant strides s_f in the flattened index space. The kernel
+processes the flat field in VMEM chunks; the input is pre-padded by the
+largest stride H = ny*nz so every neighbor access is a static in-window
+slice of one contiguous [C + 2H] window loaded per chunk (manual halo —
+the TPU-native substitute for gathers). All 13 reads + 1 write per cell
+happen in one HBM pass, where the unfused jnp form makes 7 passes.
+
+Layout: flat vectors are viewed as (rows, 128) lanes; the window is loaded
+from an ANY-space (HBM) ref with ``pl.ds`` and reshaped in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_INTERPRET = True
+CHUNK = 32768                      # cells per grid step (multiple of 128)
+
+
+def _strides(shape3):
+    nx, ny, nz = shape3
+    return (-ny * nz, ny * nz, -nz, nz, -1, 1)   # (-x,+x,-y,+y,-z,+z)
+
+
+def _kernel(strides, C, H, dflat_ref, offs_ref, xpad_ref, y_ref):
+    i = pl.program_id(0)
+    base = i * C
+    win = xpad_ref[pl.ds(base, C + 2 * H)]        # halo window -> VMEM
+    d = dflat_ref[pl.ds(base, C)]
+    acc = d * win[H:H + C]
+    for f, s in enumerate(strides):
+        off = offs_ref[f, pl.ds(base, C)]
+        acc = acc + off * win[H + s:H + s + C]
+    y_ref[...] = acc
+
+
+def stencil_spmv(diag, off, x):
+    """diag [nx,ny,nz]; off [6,nx,ny,nz]; x [nx,ny,nz] -> y = A x."""
+    shape3 = diag.shape
+    n = diag.size
+    H = shape3[1] * shape3[2]
+    C = min(CHUNK, -(-n // 128) * 128)
+    npad = -(-n // C) * C
+    dflat = jnp.pad(diag.reshape(-1), (0, npad - n))
+    offs = jnp.pad(off.reshape(6, -1), ((0, 0), (0, npad - n)))
+    xpad = jnp.pad(x.reshape(-1), (H, npad - n + H))
+    grid = (npad // C,)
+    strides = _strides(shape3)
+    out = pl.pallas_call(
+        functools.partial(_kernel, strides, C, H),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),     # dflat (manual slices)
+            pl.BlockSpec(memory_space=pl.ANY),     # offs
+            pl.BlockSpec(memory_space=pl.ANY),     # xpad (halo window)
+        ],
+        out_specs=pl.BlockSpec((C,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), x.dtype),
+        interpret=_INTERPRET,
+    )(dflat, offs, xpad)
+    return out[:n].reshape(shape3)
+
+
+def _rb_kernel(strides, C, H, rdiag_ref, red_ref, offs_ref, rpad_ref, w_ref):
+    """Fused two-color DILU apply on the flat layout (one pass per color
+    pair instead of six shifted jnp passes)."""
+    i = pl.program_id(0)
+    base = i * C
+    rwin = rpad_ref[pl.ds(base, C + 2 * H)]
+    rd = rdiag_ref[pl.ds(base, C + 2 * H)]
+    red = red_ref[pl.ds(base, C + 2 * H)]
+    blk = 1.0 - red
+
+    def nbsum(field):
+        acc = jnp.zeros((C,), field.dtype)
+        for f, s in enumerate(strides):
+            off = offs_ref[f, pl.ds(base, C)]
+            acc = acc + off * field[H + s:H + s + C]
+        return acc
+
+    # forward: y_r over the whole window (needed for black neighbor sums)
+    y_r_win = red * rwin * rd
+    y_b = blk[H:H + C] * (rwin[H:H + C] - nbsum(y_r_win)) * rd[H:H + C]
+    w_ref[...] = y_r_win[H:H + C] + y_b
+
+
+def _rb_back_kernel(strides, C, H, rdiag_ref, red_ref, offs_ref, ypad_ref,
+                    w_ref):
+    """Backward half-sweep: z_b = y_b ; z_r = y_r - rd * sum U_rb y_b."""
+    i = pl.program_id(0)
+    base = i * C
+    ywin = ypad_ref[pl.ds(base, C + 2 * H)]
+    rd = rdiag_ref[pl.ds(base, C + 2 * H)]
+    red = red_ref[pl.ds(base, C + 2 * H)]
+    yb_win = (1.0 - red) * ywin
+
+    acc = jnp.zeros((C,), ywin.dtype)
+    for f, s in enumerate(strides):
+        off = offs_ref[f, pl.ds(base, C)]
+        acc = acc + off * yb_win[H + s:H + s + C]
+    yc = ywin[H:H + C]
+    redc = red[H:H + C]
+    w_ref[...] = redc * (yc - rd[H:H + C] * acc) + (1.0 - redc) * yc
+
+
+def rb_dilu_forward(rdiag, red, off, r):
+    """Forward half-sweep of the two-color DILU (see precond.py). The
+    backward half reuses the same kernel on reversed colors."""
+    shape3 = r.shape
+    n = r.size
+    H = shape3[1] * shape3[2]
+    C = min(CHUNK, -(-n // 128) * 128)
+    npad = -(-n // C) * C
+    rdp = jnp.pad(rdiag.reshape(-1), (H, npad - n + H))
+    redp = jnp.pad(red.astype(r.dtype).reshape(-1), (H, npad - n + H))
+    offs = jnp.pad(off.reshape(6, -1), ((0, 0), (0, npad - n)))
+    rp = jnp.pad(r.reshape(-1), (H, npad - n + H))
+    strides = _strides(shape3)
+    out = pl.pallas_call(
+        functools.partial(_rb_kernel, strides, C, H),
+        grid=(npad // C,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 4,
+        out_specs=pl.BlockSpec((C,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), r.dtype),
+        interpret=_INTERPRET,
+    )(rdp, redp, offs, rp)
+    return out[:n].reshape(shape3)
+
+
+def rb_dilu_backward(rdiag, red, off, y):
+    shape3 = y.shape
+    n = y.size
+    H = shape3[1] * shape3[2]
+    C = min(CHUNK, -(-n // 128) * 128)
+    npad = -(-n // C) * C
+    rdp = jnp.pad(rdiag.reshape(-1), (H, npad - n + H))
+    redp = jnp.pad(red.astype(y.dtype).reshape(-1), (H, npad - n + H))
+    offs = jnp.pad(off.reshape(6, -1), ((0, 0), (0, npad - n)))
+    yp = jnp.pad(y.reshape(-1), (H, npad - n + H))
+    strides = _strides(shape3)
+    out = pl.pallas_call(
+        functools.partial(_rb_back_kernel, strides, C, H),
+        grid=(npad // C,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 4,
+        out_specs=pl.BlockSpec((C,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), y.dtype),
+        interpret=_INTERPRET,
+    )(rdp, redp, offs, yp)
+    return out[:n].reshape(shape3)

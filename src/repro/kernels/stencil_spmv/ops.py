@@ -1,0 +1,12 @@
+"""Jitted public wrappers for the DIA stencil kernels."""
+import jax
+
+from repro.kernels.stencil_spmv import kernel as _k
+
+stencil_spmv = jax.jit(_k.stencil_spmv)
+
+
+@jax.jit
+def rb_dilu_apply(rdiag, red, off, r):
+    y = _k.rb_dilu_forward(rdiag, red, off, r)
+    return _k.rb_dilu_backward(rdiag, red, off, y)

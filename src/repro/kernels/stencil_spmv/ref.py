@@ -1,0 +1,11 @@
+"""Pure-jnp oracles (shifted-stencil forms from repro.cfd)."""
+from repro.cfd.dia import DiaMatrix, amul_ref
+from repro.cfd.precond import RBDilu, rb_dilu_apply
+
+
+def stencil_spmv(diag, off, x):
+    return amul_ref(DiaMatrix(diag, off), x)
+
+
+def rb_dilu(rdiag, red, off, r):
+    return rb_dilu_apply(RBDilu(rdiag, red), DiaMatrix(rdiag * 0, off), r)

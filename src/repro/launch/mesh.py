@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. The dry-run process sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the real single device.
+
+Mesh topology (TPU v5e pods):
+  single-pod : (16, 16)      axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+The "pod" axis carries the slowest links (DCN/optical); FSDP/DP gradient
+reduction over ("pod","data") is therefore hierarchical by construction.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """1x1 mesh over the single real device — used by sharding unit tests."""
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:1])

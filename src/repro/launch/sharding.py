@@ -1,0 +1,145 @@
+"""Logical-axis -> mesh-axis resolution (FSDP / TP / SP / EP).
+
+Every parameter and activation carries *logical* axis names (see
+``ParamSpec`` and the ``shd(x, *axes)`` calls inside the model). This module
+resolves them against a concrete mesh:
+
+  pass 1 (TP/EP)   : model-type axes (experts, vocab, heads, ff, rnn) ->
+                     the ``model`` mesh axis, when the dim divides.
+  pass 2 (DP/FSDP) : ``batch`` -> ("pod", "data") (longest divisible prefix).
+  pass 3 (flex)    : leftover mesh axes soaked up greedily by flexible axes —
+                     ``kv_seq`` for activations/caches (sequence parallelism
+                     for long-context serving), ``embed``/``moe_ff``/... for
+                     parameters (FSDP).
+
+Divisibility is checked per tensor, so e.g. ``kv_heads=1`` simply resolves to
+replicated instead of erroring — the resolver is total over all 40 assigned
+(arch x shape) cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamSpec, is_spec
+
+# logical axes that map to the tensor-parallel 'model' axis, in priority order
+MODEL_AXES = ("experts", "vocab", "q_heads", "kv_heads", "ff", "rnn", "heads")
+BATCH_AXES = ("batch", "expert_group")
+ACT_FLEX = ("kv_seq",)
+PARAM_FLEX = ("embed", "moe_ff", "vocab", "ff", "rnn", "embed2", "rnn2")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """mode: 'train' (FSDP on) or 'serve' (params replicated over data,
+    except MoE expert ff which stays FSDP-sharded for memory)."""
+    mode: str = "train"
+
+    @property
+    def param_flex(self) -> Tuple[str, ...]:
+        return PARAM_FLEX if self.mode == "train" else ("moe_ff",)
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve(shape: Sequence[int], axes: Sequence[Optional[str]], mesh: Mesh,
+            rules: ShardingRules, kind: str) -> P:
+    """kind: 'param' | 'act'."""
+    sizes = _axis_sizes(mesh)
+    model_sz = sizes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    assign: list = [None] * len(shape)
+    used = set()
+
+    # pass 1: tensor/expert parallelism
+    order = sorted(
+        [i for i, a in enumerate(axes) if a in MODEL_AXES],
+        key=lambda i: MODEL_AXES.index(axes[i]))
+    for i in order:
+        if "model" in used or "model" not in sizes:
+            break
+        if shape[i] % model_sz == 0 and model_sz > 1:
+            assign[i] = "model"
+            used.add("model")
+
+    # pass 2: batch over (pod, data)
+    for i, a in enumerate(axes):
+        if a in BATCH_AXES:
+            got = []
+            for ax in dp_axes:
+                if ax in used:
+                    continue
+                prod = int(np.prod([sizes[g] for g in got + [ax]]))
+                if shape[i] % prod == 0:
+                    got.append(ax)
+            if got:
+                assign[i] = tuple(got) if len(got) > 1 else got[0]
+                used.update(got)
+
+    # pass 3: flexible axes soak up leftover mesh axes
+    flex = rules.param_flex if kind == "param" else ACT_FLEX
+    remaining = [ax for ax in ("pod", "data", "model") if ax in sizes and ax not in used]
+    flex_dims = sorted(
+        [i for i, a in enumerate(axes) if a in flex and assign[i] is None],
+        key=lambda i: flex.index(axes[i]))
+    for i in flex_dims:
+        got = []
+        for ax in list(remaining):
+            prod = int(np.prod([sizes[g] for g in got + [ax]]))
+            if shape[i] % prod == 0 and sizes[ax] > 1:
+                got.append(ax)
+                remaining.remove(ax)
+        if got:
+            assign[i] = tuple(got) if len(got) > 1 else got[0]
+            used.update(got)
+
+    return P(*assign)
+
+
+def param_sharding(spec: ParamSpec, mesh: Mesh, rules: ShardingRules,
+                   memory_kind: Optional[str] = None) -> NamedSharding:
+    ps = resolve(spec.shape, spec.axes, mesh, rules, "param")
+    if memory_kind:
+        return NamedSharding(mesh, ps, memory_kind=memory_kind)
+    return NamedSharding(mesh, ps)
+
+
+def tree_param_shardings(specs, mesh: Mesh, rules: ShardingRules,
+                         memory_kind: Optional[str] = None):
+    return jax.tree_util.tree_map(
+        lambda s: param_sharding(s, mesh, rules, memory_kind), specs,
+        is_leaf=is_spec)
+
+
+def make_sharder(mesh: Mesh, rules: ShardingRules):
+    """The ``shd(x, *logical_axes)`` callable threaded through the model."""
+
+    def shd(x, *axes):
+        if len(axes) != x.ndim:
+            raise ValueError(f"sharder: {len(axes)} axes for rank-{x.ndim}")
+        ps = resolve(x.shape, axes, mesh, rules, "act")
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))
+
+    return shd
+
+
+def batch_shardings(abstract_batch, mesh: Mesh, rules: ShardingRules):
+    """Token batches shard on ('pod','data') over dim 0."""
+
+    def one(sds):
+        ps = resolve(sds.shape, ("batch",) + (None,) * (len(sds.shape) - 1),
+                     mesh, rules, "act")
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map(one, abstract_batch)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

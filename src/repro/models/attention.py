@@ -1,0 +1,302 @@
+"""Attention mixers: global / sliding-window / bidirectional / cross.
+
+Memory-bounded by construction: training & prefill use *query-chunked*
+attention (a ``lax.map`` over query chunks — logits never materialize beyond
+``[B, H, chunk, Tk]``), and sliding-window layers additionally slice a banded
+KV strip so local attention is truly sub-quadratic. Decode attends a
+preallocated KV cache (ring buffer for local layers).
+
+This pure-JAX path is the reference; a Pallas flash kernel can be slotted in
+per-mixer (see ``repro.kernels``) without touching callers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, apply_mrope, apply_rope, noshard
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pd = cfg.param_dtype
+    s = {
+        "wq": ParamSpec((d, hq, hd), ("embed", "q_heads", "head_dim"), pd),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), pd),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), pd),
+        "wo": ParamSpec((hq, hd, d), ("q_heads", "head_dim", "embed"), pd),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((hq, hd), ("q_heads", "head_dim"), pd, "zeros")
+        s["bk"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), pd, "zeros")
+        s["bv"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), pd, "zeros")
+    return s
+
+
+def qkv(p, x, cfg: ModelConfig, shd=noshard):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = shd(q, "batch", None, "q_heads", None)
+    k = shd(k, "batch", None, "kv_heads", None)
+    v = shd(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def out_proj(p, o, shd=noshard):
+    return shd(jnp.einsum("bthk,hkd->btd", o, p["wo"]), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _grouped_logits(qc, k):
+    """qc [B,C,Hq,hd], k [B,L,Hkv,hd] -> logits [B,Hkv,G,C,L] (GQA grouped)."""
+    B, C, Hq, hd = qc.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = qc.reshape(B, C, Hkv, G, hd)
+    return jnp.einsum("bckgd,blkd->bkgcl", qg, k) / jnp.sqrt(hd).astype(qc.dtype)
+
+
+def _attend(qc, k, v, mask):
+    """mask [C, L] boolean (True = keep) or None. Returns [B,C,Hq,hd]."""
+    logits = _grouped_logits(qc, k).astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    B, Hkv, G, C, L = w.shape
+    o = jnp.einsum("bkgcl,blkd->bckgd", w, v)
+    return o.reshape(B, C, Hkv * G, o.shape[-1])
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      chunk: int = 512, shd=noshard):
+    """q [B,Tq,Hq,hd] vs k/v [B,Tk,Hkv,hd]; q and k share position origin 0.
+
+    window > 0 => sliding-window causal attention over a banded KV strip.
+    """
+    B, Tq, Hq, hd = q.shape
+    Tk = k.shape[1]
+    chunk = min(chunk, Tq)
+    n = -(-Tq // chunk)
+    if Tq % chunk:
+        pad = n * chunk - Tq
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    banded = window > 0 and (window + chunk) < Tk
+    L = min(Tk, chunk + window) if banded else Tk
+
+    def one(ci):
+        c0 = ci * chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, c0, chunk, axis=1)
+        qpos = c0 + jnp.arange(chunk)
+        if banded:
+            start = jnp.clip(c0 + chunk - L, 0, Tk - L)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, L, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, L, axis=1)
+            kpos = start + jnp.arange(L)
+        else:
+            kc, vc, kpos = k, v, jnp.arange(Tk)
+        mask = None
+        if causal:
+            mask = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+        return _attend(qc, kc, vc, mask)
+
+    o = jax.lax.map(one, jnp.arange(n))                 # [n,B,chunk,Hq,hd]
+    o = jnp.moveaxis(o, 0, 1).reshape(B, n * chunk, Hq, hd)
+    return o[:, :Tq]
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a preallocated cache)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, kind: str, batch: int, s_max: int) -> dict:
+    """Abstract cache layout for one attention layer."""
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    slots = min(s_max, cfg.window) if kind == "attn_local" else s_max
+    c = {
+        "k": ParamSpec((batch, slots, hkv, hd), ("batch", "kv_seq", "kv_heads", None),
+                       cfg.compute_dtype, "zeros"),
+        "v": ParamSpec((batch, slots, hkv, hd), ("batch", "kv_seq", "kv_heads", None),
+                       cfg.compute_dtype, "zeros"),
+        "pos": ParamSpec((slots,), (None,), "int32", "zeros"),
+    }
+    return c
+
+
+def decode_attend(q1, ck, cv, cpos, pos, *, window: int = 0, shd=noshard):
+    """q1 [B,1,Hq,hd]; cache already contains the current token at its slot.
+
+    cpos [slots] int32 holds the absolute position stored in each slot
+    (-1 = empty). Masks: slot valid, <= pos, and within window if local.
+    """
+    hd = q1.shape[-1]
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window > 0:
+        valid &= cpos > pos - window
+    logits = _grouped_logits(q1, ck).astype(jnp.float32)     # [B,Hkv,G,1,slots]
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
+    B, Hkv, G, _, L = w.shape
+    o = jnp.einsum("bkgcl,blkd->bckgd", w, cv)
+    return o.reshape(B, 1, Hkv * G, hd)
+
+
+def cache_insert(cache, k1, v1, pos, *, window: int = 0):
+    """Write the current token's k/v at slot ``pos`` (ring slot for local)."""
+    slots = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % slots, pos) if window > 0 else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype), slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.asarray([pos], jnp.int32).reshape(1), slot, axis=0)
+    return {**cache, "k": ck, "v": cv, "pos": cpos}
+
+
+def cache_fill_prefill(cache, k, v, *, window: int = 0):
+    """Bulk-load prefill K/V into the cache (last ``slots`` tokens for ring)."""
+    slots = cache["k"].shape[1]
+    T = k.shape[1]
+    if window > 0 and T > slots:
+        # keep the trailing window; slot index = pos % slots keeps ring coherent
+        tail_pos = jnp.arange(T - slots, T)
+        ring_slot = tail_pos % slots
+        ck = cache["k"].at[:, ring_slot].set(k[:, -slots:].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, ring_slot].set(v[:, -slots:].astype(cache["v"].dtype))
+        cpos = cache["pos"].at[ring_slot].set(tail_pos.astype(jnp.int32))
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        cpos = cache["pos"].at[:].set(
+            jnp.where(jnp.arange(slots) < T, jnp.arange(slots), -1).astype(jnp.int32))
+    return {**cache, "k": ck, "v": cv, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# Full mixer (projection + rope + attend) for the three modes
+# ---------------------------------------------------------------------------
+
+def rope_q_k(cfg: ModelConfig, q, k, positions, positions3=None):
+    if cfg.mrope_sections is not None and positions3 is not None:
+        q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _mix_attend(q, k, v, *, kind: str, cfg: ModelConfig, ctx):
+    """Route between the flash-VJP path (global/enc layers: kills the
+    backward's stacked-probability HBM traffic) and the banded baseline
+    (local layers, where the band keeps compute sub-quadratic)."""
+    causal = kind != "attn_enc"
+    window = cfg.window if kind == "attn_local" else 0
+    T = q.shape[1]
+    chunk = min(ctx.q_chunk, T)
+    banded_useful = window > 0 and (window + chunk) < k.shape[1]
+    if getattr(ctx, "flash", False) and not banded_useful:
+        from repro.models.flash import get_flash
+        return get_flash(causal, window, chunk)(q, k, v)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             chunk=chunk, shd=ctx.shd)
+
+
+def attn_train(p, x, cfg: ModelConfig, *, kind: str, ctx) -> jax.Array:
+    """Training / prefill forward (no cache output here; see attn_prefill)."""
+    shd = ctx.shd
+    q, k, v = qkv(p, x, cfg, shd)
+    B, T = x.shape[:2]
+    if kind != "attn_enc":  # encoder: no rope (whisper uses learned pos; stub adds none)
+        pos = jnp.arange(T)[None, :].repeat(B, 0)
+        q, k = rope_q_k(cfg, q, k, pos, ctx.positions3)
+    o = _mix_attend(q, k, v, kind=kind, cfg=cfg, ctx=ctx)
+    return out_proj(p, o, shd)
+
+
+def attn_prefill(p, x, cfg: ModelConfig, *, kind: str, ctx, cache):
+    """Prefill: same as train but also fills the KV cache."""
+    shd = ctx.shd
+    q, k, v = qkv(p, x, cfg, shd)
+    B, T = x.shape[:2]
+    pos = jnp.arange(T)[None, :].repeat(B, 0)
+    q, k = rope_q_k(cfg, q, k, pos, ctx.positions3)
+    window = cfg.window if kind == "attn_local" else 0
+    o = _mix_attend(q, k, v, kind=kind, cfg=cfg, ctx=ctx)
+    cache = cache_fill_prefill(cache, k, v, window=window)
+    return out_proj(p, o, shd), cache
+
+
+def attn_decode(p, x1, cfg: ModelConfig, *, kind: str, ctx, cache):
+    """x1 [B,1,d]; ctx.pos = scalar absolute position of this token."""
+    shd = ctx.shd
+    q, k, v = qkv(p, x1, cfg, shd)
+    B = x1.shape[0]
+    pos_arr = jnp.full((B, 1), ctx.pos, jnp.int32)
+    p3 = None
+    if ctx.positions3 is not None:
+        p3 = ctx.positions3
+    q, k = rope_q_k(cfg, q, k, pos_arr, p3)
+    window = cfg.window if kind == "attn_local" else 0
+    cache = cache_insert(cache, k, v, ctx.pos, window=window)
+    o = decode_attend(q, cache["k"], cache["v"], cache["pos"], ctx.pos,
+                      window=window, shd=shd)
+    return out_proj(p, o, shd), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def xattn_specs(cfg: ModelConfig) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pd = cfg.param_dtype
+    return {
+        "wq": ParamSpec((d, hq, hd), ("embed", "q_heads", "head_dim"), pd),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), pd),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), pd),
+        "wo": ParamSpec((hq, hd, d), ("q_heads", "head_dim", "embed"), pd),
+    }
+
+
+def xcache_specs(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "xk": ParamSpec((batch, cfg.enc_len, cfg.n_kv_heads, cfg.hd),
+                        ("batch", None, "kv_heads", None), cfg.compute_dtype, "zeros"),
+        "xv": ParamSpec((batch, cfg.enc_len, cfg.n_kv_heads, cfg.hd),
+                        ("batch", None, "kv_heads", None), cfg.compute_dtype, "zeros"),
+    }
+
+
+def cross_attend(p, x, enc_kv, cfg: ModelConfig, shd=noshard):
+    """x [B,T,d] queries vs precomputed encoder K/V (no mask)."""
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    q = shd(q, "batch", None, "q_heads", None)
+    o = chunked_attention(q, enc_kv["xk"], enc_kv["xv"], causal=False,
+                          chunk=512, shd=shd)
+    return out_proj(p, o, shd)
+
+
+def encode_cross_kv(p, enc_out, cfg: ModelConfig, shd=noshard):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    return {"xk": shd(k, "batch", None, "kv_heads", None),
+            "xv": shd(v, "batch", None, "kv_heads", None)}

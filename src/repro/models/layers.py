@@ -1,0 +1,127 @@
+"""Core layer ops: norms, RoPE / M-RoPE, SwiGLU MLP, embeddings.
+
+All functions are pure; parameters come in as pytrees built from
+``ParamSpec`` trees (see :mod:`repro.models.params`). Activation sharding is
+expressed through a ``shd(x, *logical_axes)`` callable threaded through the
+model — identity on a single device, ``with_sharding_constraint`` under a
+mesh (see :mod:`repro.launch.sharding`).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+
+
+def noshard(x, *axes):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), "float32", "ones")
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions [...,] -> cos/sin [..., head_dim//2] in fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x [B, T, H, hd]; positions [B, T] (ints). Rotate-half convention."""
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)   # [B,T,half]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float):
+    """Qwen2-VL M-RoPE: positions3 [B, T, 3] (t/h/w streams); ``sections``
+    partitions the half-dim, each section rotated by its own stream."""
+    B, T, H, hd = x.shape
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # pick the position stream per frequency index
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )                                                          # [half]
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32), sec_id[None, None, :].repeat(T, 1).repeat(B, 0), axis=-1
+    )                                                          # [B,T,half]
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "ff"), pd),
+        "wi_up": ParamSpec((d, f), ("embed", "ff"), pd),
+        "wo": ParamSpec((f, d), ("ff", "embed"), pd),
+    }
+
+
+def mlp(p, x, shd=noshard):
+    h = shd(jnp.einsum("btd,df->btf", x, p["wi_gate"]), "batch", None, "ff")
+    u = jnp.einsum("btd,df->btf", x, p["wi_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    return shd(jnp.einsum("btf,fd->btd", h, p["wo"]), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    s = {"tok": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                          cfg.param_dtype, scale=1.0)}
+    if not cfg.tie_embeddings:
+        s["head"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                              cfg.param_dtype)
+    return s
+
+
+def embed(p, tokens, cfg: ModelConfig, shd=noshard):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model, x.dtype) ** 0.5   # gemma-style scaling
+    return shd(x, "batch", None, None)
+
+
+def lm_logits(p, x, cfg: ModelConfig, shd=noshard):
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = jnp.einsum("btd,dv->btv", x, w.astype(x.dtype))
+    return shd(logits, "batch", None, "vocab")

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts MLP: top-k routing with sort-based capacity dispatch.
+
+TPU-native formulation (no per-token weight gathers): flatten the (token,
+expert-choice) pairs, stable-sort by expert id, rank within expert segment by
+a cumsum trick, scatter into a dense ``[E, C, d]`` buffer, run both expert
+matmuls as batched einsums (sharded over the ``experts`` -> ``model`` mesh
+axis = expert parallelism), gather back and combine with router weights.
+Tokens beyond an expert's capacity ``C = ceil(T*k/E * cf)`` are dropped
+(standard capacity-factor semantics; cf default 1.25).
+
+``moe_ref`` is the O(T*E) oracle used by tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import ParamSpec, noshard
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, pd = cfg.d_model, cfg.param_dtype
+    s = {
+        "router": ParamSpec((d, m.n_experts), ("embed", "experts"), "float32"),
+        "wi_gate": ParamSpec((m.n_experts, d, m.d_ff), ("experts", "embed", "moe_ff"), pd),
+        "wi_up": ParamSpec((m.n_experts, d, m.d_ff), ("experts", "embed", "moe_ff"), pd),
+        "wo": ParamSpec((m.n_experts, m.d_ff, d), ("experts", "moe_ff", "embed"), pd),
+    }
+    if m.shared_expert_ff:
+        f = m.shared_expert_ff
+        s["shared"] = {
+            "wi_gate": ParamSpec((d, f), ("embed", "ff"), pd),
+            "wi_up": ParamSpec((d, f), ("embed", "ff"), pd),
+            "wo": ParamSpec((f, d), ("ff", "embed"), pd),
+        }
+    return s
+
+
+def _router(p, x2, m: MoEConfig):
+    """x2 [T, d] -> (gate_weights [T,k], expert_ids [T,k], aux_loss)."""
+    logits = jnp.einsum("td,de->te", x2.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, m.top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing aux loss
+    T, E = logits.shape
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], E), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_probs)
+    return gate, idx, aux
+
+
+def _capacity(T: int, m: MoEConfig) -> int:
+    c = int(T * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8 lanes
+
+
+def _largest_divisor(T: int, G: int) -> int:
+    while G > 1 and T % G:
+        G -= 1
+    return max(G, 1)
+
+
+def moe_mlp(p, x, cfg: ModelConfig, shd=noshard, n_groups: int = 16):
+    """x [B, S, d] -> (y [B, S, d], aux_loss).
+
+    GROUP-LOCAL dispatch (beyond-paper perf iteration, EXPERIMENTS.md SPerf):
+    tokens are split into G groups aligned with the data shards; routing,
+    ranking and the capacity scatter/gather are all per-group (batched, so
+    SPMD partitions them along G with no cross-shard collectives), and the
+    only inter-shard movement left is the (G x E) buffer resharding for the
+    expert matmuls — a proper all-to-all of token payloads instead of the
+    global-argsort path's full-buffer all-reduces.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    G = _largest_divisor(T, n_groups)
+    Tg = T // G
+    C = _capacity(Tg, m)
+
+    xg = shd(x.reshape(G, Tg, d), "expert_group", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)              # [G,Tg,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], E), axis=(0, 1))
+    aux = E * jnp.sum(density * jnp.mean(probs, axis=(0, 1)))
+
+    fe = idx.reshape(G, Tg * k)                      # expert id per pair
+    ft = jnp.repeat(jnp.arange(Tg)[None], G, 0).reshape(G, Tg, 1)
+    ft = jnp.broadcast_to(jnp.arange(Tg)[None, :, None], (G, Tg, k)) \
+        .reshape(G, Tg * k)
+    grp = lambda t: shd(t, "expert_group", None)     # keep SPMD on the G axis
+    order = grp(jnp.argsort(fe, axis=1, stable=True))
+    se = grp(jnp.take_along_axis(fe, order, axis=1))
+    st = grp(jnp.take_along_axis(ft, order, axis=1))
+    counts = jnp.sum(jax.nn.one_hot(fe, E, dtype=jnp.int32), axis=1)  # [G,E]
+    seg_start = jnp.cumsum(counts, axis=1) - counts
+    rank = grp(jnp.arange(Tg * k)[None]
+               - jnp.take_along_axis(seg_start, se, axis=1))
+    keep = rank < C
+    dst = grp(jnp.where(keep, se * C + rank, E * C))  # [G, Tg*k]
+
+    def scatter_one(xg_, st_, dst_, keep_):
+        upd = jnp.where(keep_[:, None], xg_[st_], 0)
+        return jnp.zeros((E * C + 1, d), x.dtype).at[dst_].set(upd)
+
+    buf = jax.vmap(scatter_one)(xg, st, dst, keep)   # [G, E*C+1, d]
+    h = buf[:, : E * C].reshape(G, E, C, d)
+    h = shd(h, "expert_group", "experts", None, None)
+    g_ = jnp.einsum("gecd,edf->gecf", h, p["wi_gate"])
+    u = jnp.einsum("gecd,edf->gecf", h, p["wi_up"])
+    o = jax.nn.silu(g_.astype(jnp.float32)).astype(x.dtype) * u
+    o = jnp.einsum("gecf,efd->gecd", o, p["wo"])
+    o = shd(o, "expert_group", "experts", None, None)
+
+    def gather_one(o_, dst_, st_, gate_s):
+        o_flat = jnp.concatenate([o_.reshape(E * C, d),
+                                  jnp.zeros((1, d), x.dtype)], 0)
+        per_pair = o_flat[dst_].astype(jnp.float32) * gate_s[:, None]
+        return jnp.zeros((Tg, d), jnp.float32).at[st_].add(per_pair)
+
+    gate_sorted = grp(jnp.take_along_axis(gate.reshape(G, Tg * k), order,
+                                          axis=1))
+    yg = jax.vmap(gather_one)(o, dst, st, gate_sorted)   # [G,Tg,d] f32
+    yg = shd(yg.astype(x.dtype), "expert_group", None, None)
+    y = yg.reshape(B, S, d)
+    y = shd(y, "batch", None, None)
+
+    if m.shared_expert_ff:
+        sp = p["shared"]
+        sg = jnp.einsum("btd,df->btf", x, sp["wi_gate"])
+        su = jnp.einsum("btd,df->btf", x, sp["wi_up"])
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        y = y + jnp.einsum("btf,fd->btd", sh, sp["wo"])
+    return y, aux
+
+
+def moe_ref(p, x, cfg: ModelConfig):
+    """O(T*E) dense oracle: every expert on every token, masked combine.
+    No capacity drops — tests compare against moe_mlp with cf large enough
+    that nothing drops."""
+    m = cfg.moe
+    B, S, d = x.shape
+    x2 = x.reshape(-1, d)
+    gate, idx, aux = _router(p, x2, m)
+    g = jnp.einsum("td,edf->tef", x2, p["wi_gate"])
+    u = jnp.einsum("td,edf->tef", x2, p["wi_up"])
+    o = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    o = jnp.einsum("tef,efd->ted", o, p["wo"])       # [T,E,d]
+    mask = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32)  # [T,k,E]
+    w = (mask * gate[..., None]).sum(1)              # [T,E]
+    y = jnp.einsum("ted,te->td", o.astype(jnp.float32), w).astype(x.dtype)
+    y = y.reshape(B, S, d)
+    if m.shared_expert_ff:
+        sp = p["shared"]
+        sg = jnp.einsum("btd,df->btf", x.reshape(B, S, d), sp["wi_gate"])
+        su = jnp.einsum("btd,df->btf", x.reshape(B, S, d), sp["wi_up"])
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        y = y + jnp.einsum("btf,fd->btd", sh, sp["wo"])
+    return y, aux

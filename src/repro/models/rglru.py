@@ -1,0 +1,141 @@
+"""RecurrentGemma / Griffin recurrent block: temporal conv + RG-LRU.
+
+RG-LRU recurrence (Griffin, arXiv:2402.19427):
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(L) * r_t)      c = 8, L learned (per channel)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block is: y = W_out( GeLU(W_gate u) * RGLRU(conv1d(W_in u)) ).
+Training uses ``jax.lax.associative_scan`` over the sequence (log-depth —
+TPU-friendly; the recurrence is elementwise so the scan is pure VPU work).
+Decode is a single fused step carrying (h, conv window) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, noshard
+
+RG_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    pd = cfg.param_dtype
+    return {
+        "w_in": ParamSpec((d, w), ("embed", "rnn"), pd),
+        "w_gate": ParamSpec((d, w), ("embed", "rnn"), pd),
+        "conv_w": ParamSpec((cfg.conv_width, w), (None, "rnn"), "float32",
+                            "normal", 0.3),
+        "conv_b": ParamSpec((w,), ("rnn",), "float32", "zeros"),
+        "wa": ParamSpec((w, w), ("rnn", "rnn2"), pd),
+        "wx": ParamSpec((w, w), ("rnn", "rnn2"), pd),
+        "ba": ParamSpec((w,), ("rnn",), "float32", "zeros"),
+        "bx": ParamSpec((w,), ("rnn",), "float32", "zeros"),
+        "lam": ParamSpec((w,), ("rnn",), "float32", "normal", 1.0),
+        "w_out": ParamSpec((w, d), ("rnn", "embed"), pd),
+    }
+
+
+def rglru_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "h": ParamSpec((batch, w), ("batch", "rnn"), "float32", "zeros"),
+        "conv": ParamSpec((batch, cfg.conv_width - 1, w), ("batch", None, "rnn"),
+                          cfg.compute_dtype, "zeros"),
+    }
+
+
+def _gates(p, xc):
+    """xc [B,T,w] (post-conv) -> (log_a, beta*ix) in fp32."""
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("btw,wu->btu", xc, p["wa"]).astype(jnp.float32)
+                       + p["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("btw,wu->btu", xc, p["wx"]).astype(jnp.float32)
+                       + p["bx"])
+    log_a = -RG_C * jax.nn.softplus(p["lam"]) * r           # <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    return log_a, beta * (i * xf)
+
+
+def _conv1d(p, x, conv_state):
+    """Causal depthwise temporal conv, width K. x [B,T,w]."""
+    K = p["conv_w"].shape[0]
+    xpad = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # [B,T+K-1,w]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(K):
+        out = out + xpad[:, j:j + x.shape[1]].astype(jnp.float32) * p["conv_w"][j]
+    out = out + p["conv_b"]
+    new_state = xpad[:, -(K - 1):] if K > 1 else conv_state
+    return out.astype(x.dtype), new_state
+
+
+def rglru_train(p, x, cfg: ModelConfig, *, ctx, state=None):
+    """x [B,T,d] -> (y [B,T,d], new_state)."""
+    shd = ctx.shd
+    B, T, d = x.shape
+    w = cfg.rnn_width or d
+    u = shd(jnp.einsum("btd,dw->btw", x, p["w_in"]), "batch", None, "rnn")
+    gate = jnp.einsum("btd,dw->btw", x, p["w_gate"])
+    if state is None:
+        conv_state = jnp.zeros((B, cfg.conv_width - 1, w), x.dtype)
+        h0 = jnp.zeros((B, w), jnp.float32)
+    else:
+        conv_state, h0 = state["conv"], state["h"]
+    xc, new_conv = _conv1d(p, u, conv_state)
+    log_a, b = _gates(p, xc)
+    # h_t = a_t h_{t-1} + b_t, with h_0 folded in as an extra leading element
+    a_seq = jnp.exp(log_a)
+    a_all = jnp.concatenate([jnp.ones((B, 1, w)), a_seq], axis=1)
+    b_all = jnp.concatenate([h0[:, None], b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    h = hh[:, 1:]                                            # [B,T,w]
+    y = h.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    y = shd(jnp.einsum("btw,wd->btd", y, p["w_out"]), "batch", None, None)
+    return y, {"h": hh[:, -1], "conv": new_conv}
+
+
+def rglru_decode(p, x1, cfg: ModelConfig, *, ctx, state):
+    """Single token step. x1 [B,1,d]."""
+    B, _, d = x1.shape
+    u = jnp.einsum("btd,dw->btw", x1, p["w_in"])
+    gate = jnp.einsum("btd,dw->btw", x1, p["w_gate"])
+    xc, new_conv = _conv1d(p, u, state["conv"])
+    log_a, b = _gates(p, xc)
+    h = jnp.exp(log_a[:, 0]) * state["h"] + b[:, 0]
+    y = h[:, None].astype(x1.dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32)).astype(x1.dtype)
+    y = jnp.einsum("btw,wd->btd", y, p["w_out"])
+    return y, {"h": h, "conv": new_conv}
+
+
+def rglru_ref(p, x, cfg: ModelConfig, state=None):
+    """Sequential oracle for tests."""
+    B, T, d = x.shape
+    w = cfg.rnn_width or d
+    u = jnp.einsum("btd,dw->btw", x, p["w_in"])
+    gate = jnp.einsum("btd,dw->btw", x, p["w_gate"])
+    conv_state = (state["conv"] if state is not None
+                  else jnp.zeros((B, cfg.conv_width - 1, w), x.dtype))
+    h = state["h"] if state is not None else jnp.zeros((B, w), jnp.float32)
+    xc, _ = _conv1d(p, u, conv_state)
+    log_a, b = _gates(p, xc)
+    outs = []
+    for t in range(T):
+        h = jnp.exp(log_a[:, t]) * h + b[:, t]
+        outs.append(h)
+    hs = jnp.stack(outs, axis=1)
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("btw,wd->btd", y, p["w_out"])

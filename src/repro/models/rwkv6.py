@@ -1,0 +1,199 @@
+"""RWKV6 "Finch" time-mix: data-dependent per-channel decay linear attention.
+
+Semantics (the sequential oracle, per head; r,k,w,u in R^dk, v in R^dv):
+
+    out_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+
+Training/prefill uses a *chunked* closed form (log-space-safe: every exponent
+is a cumulative-decay difference with t >= i, hence <= 0 — no overflow):
+
+    la_t   = cumsum(log w)                (within chunk, la_0 = 0)
+    inter  = (r_t * exp(la_{t-1})) @ S_in
+    intra  = sum_{i<t} [sum_d r_t k_i exp(la_{t-1,d} - la_{i,d})] v_i
+           + (r_t . (u*k_t)) v_t
+    S_out  = diag(exp(la_C)) S_in + sum_i (k_i * exp(la_C - la_i)) v_i^T
+
+``repro.kernels.rwkv6_scan`` implements the same chunked math as a Pallas
+kernel; this module is the pure-JAX path and the kernels' semantics anchor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, noshard, rmsnorm
+
+LORA_R = 32  # rank of the ddlerp / decay adapters (RWKV6 uses 32/64)
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    pd = cfg.param_dtype
+    adapters = {}
+    for nm in ("r", "k", "v", "g", "w"):
+        adapters[f"mu_{nm}"] = ParamSpec((d,), ("embed",), "float32", "zeros")
+        adapters[f"A_{nm}"] = ParamSpec((d, LORA_R), ("embed", None), pd)
+        adapters[f"B_{nm}"] = ParamSpec((LORA_R, d), (None, "embed"), pd, "zeros")
+    return {
+        **adapters,
+        "wr": ParamSpec((d, H, hd), ("embed", "q_heads", "head_dim"), pd),
+        "wk": ParamSpec((d, H, hd), ("embed", "q_heads", "head_dim"), pd),
+        "wv": ParamSpec((d, H, hd), ("embed", "q_heads", "head_dim"), pd),
+        "wg": ParamSpec((d, H, hd), ("embed", "q_heads", "head_dim"), pd),
+        "w0": ParamSpec((H, hd), ("q_heads", "head_dim"), "float32", "rwkv_decay"),
+        "u": ParamSpec((H, hd), ("q_heads", "head_dim"), "float32", "zeros"),
+        "ln_out": ParamSpec((H, hd), ("q_heads", "head_dim"), "float32", "ones"),
+        "wo": ParamSpec((H, hd, d), ("q_heads", "head_dim", "embed"), pd),
+    }
+
+
+def rwkv_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    H, hd, d = cfg.n_heads, cfg.hd, cfg.d_model
+    return {
+        "S": ParamSpec((batch, H, hd, hd), ("batch", "q_heads", None, None),
+                       "float32", "zeros"),
+        "x_prev": ParamSpec((batch, d), ("batch", None), cfg.compute_dtype, "zeros"),
+    }
+
+
+def _ddlerp(p, nm, x, x_prev):
+    """Data-dependent token-shift lerp (RWKV6): x + (x_prev - x) * mix."""
+    dx = (x_prev - x).astype(jnp.float32)
+    base = x.astype(jnp.float32) + dx * p[f"mu_{nm}"]
+    lora = jnp.tanh(base.astype(p[f"A_{nm}"].dtype) @ p[f"A_{nm}"]) @ p[f"B_{nm}"]
+    mix = p[f"mu_{nm}"] + lora.astype(jnp.float32)
+    return (x.astype(jnp.float32) + dx * mix).astype(x.dtype)
+
+
+def _projections(p, x, x_prev, cfg: ModelConfig):
+    """Token-shifted projections. x [B,T,d]; x_prev [B,T,d] (shifted input)."""
+    r = jnp.einsum("btd,dhk->bthk", _ddlerp(p, "r", x, x_prev), p["wr"])
+    k = jnp.einsum("btd,dhk->bthk", _ddlerp(p, "k", x, x_prev), p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", _ddlerp(p, "v", x, x_prev), p["wv"])
+    g = jnp.einsum("btd,dhk->bthk", _ddlerp(p, "g", x, x_prev), p["wg"])
+    xw = _ddlerp(p, "w", x, x_prev).astype(jnp.float32)
+    wlora = jnp.tanh(xw.astype(p["A_w"].dtype) @ p["A_w"]) @ p["B_w"]
+    dproj = wlora.astype(jnp.float32).reshape(*x.shape[:2], cfg.n_heads, cfg.hd)
+    logw = -jnp.exp(jnp.clip(p["w0"] + dproj, -8.0, 6.0))   # log-decay <= 0
+    logw = jnp.maximum(logw, -12.0)                          # floor for stability
+    return r, k, v, g, logw
+
+
+def rwkv_chunk(r, k, v, logw, u, S_in, chunk: int):
+    """Chunked linear-attention scan over the T axis.
+
+    r,k,v [B,T,H,hd] (compute dtype); logw [B,T,H,hd] fp32; u [H,hd] fp32;
+    S_in [B,H,hd,hd] fp32. Returns (out [B,T,H,hd] fp32, S_out).
+    """
+    B, T, H, hd = r.shape
+    C = min(chunk, T)
+    n = T // C
+    assert T % C == 0, (T, C)
+    rs = r.astype(jnp.float32).reshape(B, n, C, H, hd)
+    ks = k.astype(jnp.float32).reshape(B, n, C, H, hd)
+    vs = v.astype(jnp.float32).reshape(B, n, C, H, hd)
+    lw = logw.reshape(B, n, C, H, hd)
+
+    def body(S, xs):
+        rc, kc, vc, lwc = xs                           # [B,C,H,hd]
+        la = jnp.cumsum(lwc, axis=1)                   # la_t, t=1..C
+        la_prev = la - lwc                             # la_{t-1}
+        rA = rc * jnp.exp(la_prev)
+        inter = jnp.einsum("bthi,bhij->bthj", rA, S)
+        # intra: pairwise decay differences (exponent <= 0 by construction)
+        D = la_prev[:, :, None] - la[:, None, :]       # [B,C(t),C(i),H,hd]
+        mask = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])
+        D = jnp.where(mask[None, :, :, None, None], D, -jnp.inf)
+        att = jnp.einsum("bthd,bihd,btihd->btih", rc, kc, jnp.exp(D))
+        diag = jnp.einsum("bthd,bthd,hd->bth", rc, kc, u)
+        att = att + diag[:, :, None] * jnp.eye(C)[None, :, :, None]
+        intra = jnp.einsum("btih,bihj->bthj", att, vc)
+        out_c = inter + intra
+        la_C = la[:, -1]                               # [B,H,hd]
+        kA = kc * jnp.exp(la_C[:, None] - la)
+        S_new = jnp.exp(la_C)[..., None] * S + jnp.einsum(
+            "bthi,bthj->bhij", kA, vc)
+        return S_new, out_c
+
+    xs = (jnp.moveaxis(rs, 1, 0), jnp.moveaxis(ks, 1, 0),
+          jnp.moveaxis(vs, 1, 0), jnp.moveaxis(lw, 1, 0))
+    S_out, outs = jax.lax.scan(body, S_in, xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T, H, hd)
+    return out, S_out
+
+
+def rwkv_ref_scan(r, k, v, logw, u, S_in):
+    """Sequential oracle (tests / kernels ref)."""
+    B, T, H, hd = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, lwt = [a.astype(jnp.float32) for a in xs]
+        out = jnp.einsum("bhi,bhij->bhj", rt, S) + \
+            jnp.einsum("bhi,hi,bhi,bhj->bhj", rt, u, kt, vt)
+        S = jnp.exp(lwt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    S_out, outs = jax.lax.scan(step, S_in, xs)
+    return jnp.moveaxis(outs, 0, 1), S_out
+
+
+def rwkv_train(p, x, cfg: ModelConfig, *, ctx, state=None, chunk: int = 64):
+    """Full-sequence time-mix. Returns (y, new_state)."""
+    B, T, d = x.shape
+    x_prev_tok = state["x_prev"] if state is not None else jnp.zeros((B, d), x.dtype)
+    x_shift = jnp.concatenate([x_prev_tok[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, logw = _projections(p, x, x_shift, cfg)
+    S_in = (state["S"] if state is not None
+            else jnp.zeros((B, cfg.n_heads, cfg.hd, cfg.hd), jnp.float32))
+    out, S_out = rwkv_chunk(r, k, v, logw, p["u"], S_in, chunk)
+    # per-head groupnorm then output gate
+    out = rmsnorm(out.reshape(B, T, cfg.n_heads, cfg.hd),
+                  jnp.ones((cfg.hd,), jnp.float32)) * p["ln_out"].astype(out.dtype)
+    out = out.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    y = ctx.shd(y, "batch", None, None)
+    new_state = {"S": S_out, "x_prev": x[:, -1]}
+    return y, new_state
+
+
+def rwkv_decode(p, x1, cfg: ModelConfig, *, ctx, state):
+    """Single-token step: O(1) in sequence length. x1 [B,1,d]."""
+    B, _, d = x1.shape
+    x_shift = state["x_prev"][:, None]
+    r, k, v, g, logw = _projections(p, x1, x_shift, cfg)
+    out, S_out = rwkv_ref_scan(r, k, v, logw, p["u"], state["S"])
+    out = rmsnorm(out.reshape(B, 1, cfg.n_heads, cfg.hd),
+                  jnp.ones((cfg.hd,), jnp.float32)) * p["ln_out"].astype(out.dtype)
+    out = out.astype(x1.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x1.dtype)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return y, {"S": S_out, "x_prev": x1[:, 0]}
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel-mix (the MLP of rwkv layers)
+# ---------------------------------------------------------------------------
+
+def channelmix_specs(cfg: ModelConfig) -> dict:
+    d, f, pd = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), "float32", "zeros"),
+        "mu_r": ParamSpec((d,), ("embed",), "float32", "zeros"),
+        "wk": ParamSpec((d, f), ("embed", "ff"), pd),
+        "wv": ParamSpec((f, d), ("ff", "embed"), pd),
+        "wr": ParamSpec((d, d), ("embed", "embed2"), pd),
+    }
+
+
+def channelmix(p, x, x_shift, cfg: ModelConfig, shd=noshard):
+    xf, sf = x.astype(jnp.float32), x_shift.astype(jnp.float32)
+    xk = (xf + (sf - xf) * p["mu_k"]).astype(x.dtype)
+    xr = (xf + (sf - xf) * p["mu_r"]).astype(x.dtype)
+    k = jnp.einsum("btd,df->btf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    k = shd(k, "batch", None, "ff")
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"]).astype(jnp.float32))
+    y = r.astype(x.dtype) * jnp.einsum("btf,fd->btd", k, p["wv"])
+    return shd(y, "batch", None, None)

@@ -1,0 +1,371 @@
+"""Composable decoder (+ optional encoder) LM over a *layer program*.
+
+A config's ``layer_cycle`` (e.g. RecurrentGemma's ``(rglru, rglru,
+attn_local)`` or Gemma3's ``(local x5, global)``) is tiled to ``n_layers``.
+Full cycles are executed under a single ``jax.lax.scan`` over stacked
+per-cycle weights — HLO size stays O(cycle), not O(n_layers), which keeps
+80-layer configs lowerable/compilable quickly; the non-divisible remainder is
+unrolled. ``jax.checkpoint`` (remat) wraps the scanned body.
+
+Three entry points share the layer interpreter: ``forward_train`` (full
+sequence, no cache), ``prefill`` (full sequence, fills caches), and
+``decode_step`` (one token against caches). Recurrent mixers (rwkv / rglru)
+carry constant-size state instead of a KV cache — that is what makes
+``long_500k`` runnable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import rglru as G
+from repro.models import rwkv6 as R
+from repro.models.layers import (embed, embed_specs, lm_logits, mlp, mlp_specs,
+                                 noshard, rmsnorm, rmsnorm_spec)
+from repro.models.params import (ParamSpec, abstract_params, init_params,
+                                 stack_specs)
+
+
+@dataclasses.dataclass
+class Ctx:
+    mode: str = "train"                  # train | prefill | decode
+    shd: Callable = noshard
+    q_chunk: int = 512
+    rwkv_chunk: int = 32   # perf iteration C (EXPERIMENTS.md SPerf)
+    positions3: Optional[jax.Array] = None   # [B,T,3] for M-RoPE
+    pos: Optional[jax.Array] = None          # decode position (scalar)
+    enc_out: Optional[jax.Array] = None      # whisper encoder output
+    remat: bool = True
+    remat_policy: Optional[Any] = None
+    flash: bool = True                       # flash-VJP attention (see flash.py)
+
+
+# ---------------------------------------------------------------------------
+# Layer program
+# ---------------------------------------------------------------------------
+
+def _effective_cycle(cfg: ModelConfig) -> Tuple[Tuple[str, str], ...]:
+    """Cycle of (mixer_kind, mlp_kind), extended to lcm with moe periodicity."""
+    base = cfg.layer_cycle
+    period = math.lcm(len(base), cfg.moe_every if cfg.moe else 1)
+    cyc = []
+    for i in range(period):
+        mixer = base[i % len(base)]
+        if cfg.moe is not None and (i % cfg.moe_every) == cfg.moe_offset:
+            mlp_kind = "moe"
+        elif mixer == "rwkv":
+            mlp_kind = "cm"
+        else:
+            mlp_kind = "dense"
+        cyc.append((mixer, mlp_kind))
+    return tuple(cyc)
+
+
+def layer_plan(cfg: ModelConfig):
+    """Returns (cycle, n_scanned_cycles, remainder_kinds)."""
+    cyc = _effective_cycle(cfg)
+    n_full = cfg.n_layers // len(cyc)
+    rem = [cyc[i % len(cyc)] for i in range(n_full * len(cyc), cfg.n_layers)]
+    return cyc, n_full, tuple(rem)
+
+
+def _one_layer_specs(cfg: ModelConfig, mixer: str, mlp_kind: str) -> dict:
+    d = cfg.d_model
+    s: Dict[str, Any] = {"norm1": rmsnorm_spec(d), "norm2": rmsnorm_spec(d)}
+    if mixer in ("attn", "attn_local", "attn_enc"):
+        s["mixer"] = A.attn_specs(cfg)
+    elif mixer == "attn_xdec":
+        s["mixer"] = A.attn_specs(cfg)
+        s["cross"] = A.xattn_specs(cfg)
+        s["norm_x"] = rmsnorm_spec(d)
+    elif mixer == "rwkv":
+        s["mixer"] = R.rwkv_specs(cfg)
+    elif mixer == "rglru":
+        s["mixer"] = G.rglru_specs(cfg)
+    else:
+        raise ValueError(mixer)
+    if mlp_kind == "moe":
+        s["mlp"] = M.moe_specs(cfg)
+    elif mlp_kind == "cm":
+        s["mlp"] = R.channelmix_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg)
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    cyc, n_full, rem = layer_plan(cfg)
+    specs: Dict[str, Any] = {"embed": embed_specs(cfg)}
+    if n_full:
+        specs["cycles"] = {
+            f"p{j}": stack_specs(_one_layer_specs(cfg, mk, lk), n_full)
+            for j, (mk, lk) in enumerate(cyc)
+        }
+    for r, (mk, lk) in enumerate(rem):
+        specs[f"rest{r}"] = _one_layer_specs(cfg, mk, lk)
+    specs["final_norm"] = rmsnorm_spec(cfg.d_model)
+    if cfg.n_enc_layers:
+        enc_layer = _one_layer_specs(cfg, "attn_enc", "dense")
+        specs["encoder"] = {
+            "layers": stack_specs(enc_layer, cfg.n_enc_layers),
+            "norm": rmsnorm_spec(cfg.d_model),
+        }
+    return specs
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    return init_params(key, param_specs(cfg))
+
+
+def abstract(cfg: ModelConfig):
+    return abstract_params(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Cache / state layout
+# ---------------------------------------------------------------------------
+
+def _one_layer_cache_specs(cfg, mixer, batch, s_max):
+    if mixer in ("attn", "attn_local"):
+        return A.cache_specs(cfg, mixer, batch, s_max)
+    if mixer == "attn_xdec":
+        return {**A.cache_specs(cfg, "attn", batch, s_max),
+                **A.xcache_specs(cfg, batch)}
+    if mixer == "rwkv":
+        rs = R.rwkv_state_specs(cfg, batch)
+        rs["x_cm"] = ParamSpec((batch, cfg.d_model), ("batch", None),
+                               cfg.compute_dtype, "zeros")
+        return rs
+    if mixer == "rglru":
+        return G.rglru_state_specs(cfg, batch)
+    raise ValueError(mixer)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    cyc, n_full, rem = layer_plan(cfg)
+    specs: Dict[str, Any] = {}
+    if n_full:
+        specs["cycles"] = {
+            f"p{j}": stack_specs(_one_layer_cache_specs(cfg, mk, batch, s_max), n_full)
+            for j, (mk, _) in enumerate(cyc)
+        }
+    for r, (mk, _) in enumerate(rem):
+        specs[f"rest{r}"] = _one_layer_cache_specs(cfg, mk, batch, s_max)
+    return specs
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int):
+    return abstract_params(cache_specs(cfg, batch, s_max))
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        cache_specs(cfg, batch, s_max), is_leaf=lambda x: isinstance(x, ParamSpec))
+    arrs = []
+    for s in leaves:
+        if s.dtype == "int32":
+            arrs.append(jnp.full(s.shape, -1, jnp.int32))   # empty slots
+        else:
+            arrs.append(jnp.zeros(s.shape, s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+# ---------------------------------------------------------------------------
+# Single-layer forward (all modes)
+# ---------------------------------------------------------------------------
+
+def layer_fwd(p, x, cfg: ModelConfig, mixer: str, mlp_kind: str, ctx: Ctx,
+              cache=None):
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, p["norm1"])
+    new_cache = cache
+    if mixer in ("attn", "attn_local", "attn_enc"):
+        if ctx.mode == "train" or mixer == "attn_enc":
+            y = A.attn_train(p["mixer"], h, cfg, kind=mixer, ctx=ctx)
+        elif ctx.mode == "prefill":
+            y, new_cache = A.attn_prefill(p["mixer"], h, cfg, kind=mixer,
+                                          ctx=ctx, cache=cache)
+        else:
+            y, new_cache = A.attn_decode(p["mixer"], h, cfg, kind=mixer,
+                                         ctx=ctx, cache=cache)
+    elif mixer == "attn_xdec":
+        if ctx.mode == "train":
+            y = A.attn_train(p["mixer"], h, cfg, kind="attn", ctx=ctx)
+        elif ctx.mode == "prefill":
+            y, new_cache = A.attn_prefill(p["mixer"], h, cfg, kind="attn",
+                                          ctx=ctx, cache=cache)
+        else:
+            y, new_cache = A.attn_decode(p["mixer"], h, cfg, kind="attn",
+                                         ctx=ctx, cache=cache)
+        x = x + y
+        hx = rmsnorm(x, p["norm_x"])
+        if ctx.mode == "train":
+            enc_kv = A.encode_cross_kv(p["cross"], ctx.enc_out, cfg, ctx.shd)
+        elif ctx.mode == "prefill":
+            enc_kv = A.encode_cross_kv(p["cross"], ctx.enc_out, cfg, ctx.shd)
+            new_cache = {**new_cache, **enc_kv}
+        else:
+            enc_kv = {"xk": cache["xk"], "xv": cache["xv"]}
+            new_cache = {**new_cache, "xk": cache["xk"], "xv": cache["xv"]}
+        y = A.cross_attend(p["cross"], hx, enc_kv, cfg, ctx.shd)
+    elif mixer == "rwkv":
+        state = None
+        if cache is not None:
+            state = {"S": cache["S"], "x_prev": cache["x_prev"]}
+        if ctx.mode == "decode":
+            y, ns = R.rwkv_decode(p["mixer"], h, cfg, ctx=ctx, state=state)
+        else:
+            y, ns = R.rwkv_train(p["mixer"], h, cfg, ctx=ctx, state=state,
+                                 chunk=ctx.rwkv_chunk)
+        if cache is not None:
+            new_cache = {**cache, **ns}
+    elif mixer == "rglru":
+        state = None
+        if cache is not None:
+            state = {"h": cache["h"], "conv": cache["conv"]}
+        if ctx.mode == "decode":
+            y, ns = G.rglru_decode(p["mixer"], h, cfg, ctx=ctx, state=state)
+        else:
+            y, ns = G.rglru_train(p["mixer"], h, cfg, ctx=ctx, state=state)
+        if cache is not None:
+            new_cache = ns
+    else:
+        raise ValueError(mixer)
+    x = x + y
+
+    h2 = rmsnorm(x, p["norm2"])
+    if mlp_kind == "moe":
+        y2, aux = M.moe_mlp(p["mlp"], h2, cfg, ctx.shd)
+    elif mlp_kind == "cm":
+        # channel-mix token shift: train shifts in-sequence; decode uses state
+        if ctx.mode == "decode" and cache is not None:
+            shift = cache["x_cm"][:, None]
+        else:
+            prev = (cache["x_cm"] if (cache is not None and ctx.mode == "prefill")
+                    else jnp.zeros((h2.shape[0], h2.shape[-1]), h2.dtype))
+            shift = jnp.concatenate([prev[:, None], h2[:, :-1]], axis=1)
+        y2 = R.channelmix(p["mlp"], h2, shift, cfg, ctx.shd)
+        if cache is not None and new_cache is not None:
+            new_cache = {**new_cache, "x_cm": h2[:, -1]}
+    else:
+        y2 = mlp(p["mlp"], h2, ctx.shd)
+    return x + y2, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, enc_embeds, cfg: ModelConfig, ctx: Ctx):
+    """enc_embeds [B, enc_len, d] — precomputed frame embeddings (stub)."""
+    x = enc_embeds.astype(cfg.compute_dtype)
+
+    def body(x, lp):
+        x, _, _ = layer_fwd(lp, x, cfg, "attn_enc", "dense", ctx)
+        return x, None
+
+    f = jax.checkpoint(body) if ctx.remat else body
+    x, _ = jax.lax.scan(f, x, params["encoder"]["layers"])
+    return rmsnorm(x, params["encoder"]["norm"])
+
+
+# ---------------------------------------------------------------------------
+# Backbone drivers
+# ---------------------------------------------------------------------------
+
+def _run_layers(params, x, cfg: ModelConfig, ctx: Ctx, caches=None):
+    """Interpret the layer program. Returns (x, new_caches, aux_total)."""
+    cyc, n_full, rem = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+
+    if n_full:
+        cyc_params = params["cycles"]
+        cyc_caches = caches["cycles"] if caches is not None else None
+
+        def cycle_body(carry, xs):
+            x, aux = carry
+            lp = xs["p"]
+            cc = xs.get("c") if caches is not None else None
+            new_cc = {}
+            for j, (mk, lk) in enumerate(cyc):
+                cj = cc[f"p{j}"] if cc is not None else None
+                x, ncj, a = layer_fwd(lp[f"p{j}"], x, cfg, mk, lk, ctx, cj)
+                if cc is not None:
+                    new_cc[f"p{j}"] = ncj
+                aux = aux + a
+            return (x, aux), (new_cc if cc is not None else None)
+
+        body = cycle_body
+        if ctx.remat:
+            body = jax.checkpoint(cycle_body, policy=ctx.remat_policy,
+                                  prevent_cse=False)
+        xs = {"p": cyc_params}
+        if caches is not None:
+            xs["c"] = cyc_caches
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+        if caches is not None:
+            new_caches["cycles"] = ys
+
+    for r, (mk, lk) in enumerate(rem):
+        cj = caches.get(f"rest{r}") if caches is not None else None
+        x, ncj, a = layer_fwd(params[f"rest{r}"], x, cfg, mk, lk, ctx, cj)
+        aux_total = aux_total + a
+        if caches is not None:
+            new_caches[f"rest{r}"] = ncj
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+def _maybe_merge_embeds(x, batch):
+    """VLM early-fusion stub: splice precomputed patch embeddings in."""
+    if "embeds" in batch and batch["embeds"] is not None:
+        mask = batch["embed_mask"][..., None]
+        x = jnp.where(mask, batch["embeds"].astype(x.dtype), x)
+    return x
+
+
+def forward_train(params, batch, cfg: ModelConfig, ctx: Ctx):
+    """batch: tokens [B,S] (+ positions3 / embeds / enc_embeds). -> (logits, aux)."""
+    if cfg.n_enc_layers:
+        ctx.enc_out = encode(params, batch["enc_embeds"], cfg, ctx)
+    if cfg.mrope_sections is not None:
+        ctx.positions3 = batch["positions3"]
+    x = embed(params["embed"], batch["tokens"], cfg, ctx.shd)
+    x = _maybe_merge_embeds(x, batch)
+    x, _, aux = _run_layers(params, x, cfg, ctx)
+    x = rmsnorm(x, params["final_norm"])
+    return lm_logits(params["embed"], x, cfg, ctx.shd), aux
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: Ctx, caches):
+    """Fill caches from a full prompt; returns (last-token logits, caches)."""
+    ctx = dataclasses.replace(ctx, mode="prefill")
+    if cfg.n_enc_layers:
+        ctx.enc_out = encode(params, batch["enc_embeds"], cfg, ctx)
+    if cfg.mrope_sections is not None:
+        ctx.positions3 = batch["positions3"]
+    x = embed(params["embed"], batch["tokens"], cfg, ctx.shd)
+    x = _maybe_merge_embeds(x, batch)
+    x, caches, _ = _run_layers(params, x, cfg, ctx, caches)
+    x = rmsnorm(x[:, -1:], params["final_norm"])
+    return lm_logits(params["embed"], x, cfg, ctx.shd), caches
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig, ctx: Ctx):
+    """token [B] int32; pos scalar int32. Returns (logits [B,1,V], caches)."""
+    ctx = dataclasses.replace(ctx, mode="decode", pos=pos)
+    if cfg.mrope_sections is not None:
+        B = token.shape[0]
+        ctx.positions3 = jnp.full((B, 1, 3), pos, jnp.int32)
+    x = embed(params["embed"], token[:, None], cfg, ctx.shd)
+    x, caches, _ = _run_layers(params, x, cfg, ctx, caches)
+    x = rmsnorm(x, params["final_norm"])
+    return lm_logits(params["embed"], x, cfg, ctx.shd), caches

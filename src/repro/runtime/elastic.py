@@ -1,0 +1,41 @@
+"""Elastic scaling: resume any checkpoint on any mesh shape.
+
+Checkpoints are mesh-agnostic (full logical arrays + tree paths), and all
+shardings derive from logical axis names (launch/sharding.py), so scaling
+from N to M chips is: build the new mesh, re-derive shardings, restore.
+No resharding tool, no migration step — the checkpoint IS the exchange
+format. This is what bounds blast radius when a pod is lost: the job
+restarts on the surviving pods with the same code path as a normal resume.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.launch import sharding as SH
+from repro.models.params import is_spec
+
+
+def reshard_restore(ckpt: Checkpointer, specs: Any, mesh, rules=None,
+                    step: Optional[int] = None, memory_kind=None):
+    """Restore a param-spec-shaped checkpoint onto ``mesh``."""
+    rules = rules or SH.ShardingRules("train")
+    from repro.models.params import abstract_params
+    like = abstract_params(specs)
+    shardings = SH.tree_param_shardings(specs, mesh, rules,
+                                        memory_kind=memory_kind)
+    return ckpt.restore(like, step=step, shardings=shardings)
+
+
+def mesh_transition_plan(old_shape, new_shape) -> dict:
+    """Describe the transition (for logs/ops review): per-axis scale factor
+    and whether each is a clean divisor change (zero-copy reshard)."""
+    plan = {"old": list(old_shape), "new": list(new_shape), "axes": []}
+    for i, (a, b) in enumerate(zip(old_shape, new_shape)):
+        plan["axes"].append({
+            "axis": i, "old": a, "new": b,
+            "clean": (max(a, b) % min(a, b) == 0),
+        })
+    return plan

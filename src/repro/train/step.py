@@ -1,0 +1,100 @@
+"""Train / serve step functions — the units the launcher jits and lowers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.layers import noshard
+from repro.optim import adamw
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits, targets, shd=noshard):
+    """Next-token CE in fp32; logits [B,S,V] (already shifted by caller)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: T.Ctx):
+    logits, aux = T.forward_train(params, batch, cfg, ctx)
+    ce = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:], ctx.shd)
+    return ce + MOE_AUX_WEIGHT * aux, (ce, aux)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    make_ctx=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    make_ctx = make_ctx or (lambda: T.Ctx(mode="train"))
+
+    def train_step(params, opt_state, batch):
+        ctx = make_ctx()
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, ctx)
+        params, opt_state, gnorm = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "ce": ce, "moe_aux": aux, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, make_ctx=None):
+    make_ctx = make_ctx or (lambda: T.Ctx(mode="prefill"))
+
+    def prefill_step(params, batch, caches):
+        ctx = make_ctx()
+        logits, caches = T.prefill(params, batch, cfg, ctx, caches)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, make_ctx=None):
+    make_ctx = make_ctx or (lambda: T.Ctx(mode="decode"))
+
+    def decode_step(params, token, caches, pos):
+        ctx = make_ctx()
+        logits, caches = T.decode_step(params, token, caches, pos, cfg, ctx)
+        return logits, caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs for lowering (the dry-run path: ShapeDtypeStruct only)
+# ---------------------------------------------------------------------------
+
+def abstract_batch(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    b: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.mrope_sections is not None:
+        b["positions3"] = jax.ShapeDtypeStruct((batch, seq, 3), jnp.int32)
+    if cfg.n_enc_layers:
+        b["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    return b
+
+
+def demo_batch(key, cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Synthetic concrete batch matching abstract_batch (smoke tests)."""
+    ks = jax.random.split(key, 3)
+    b: Dict[str, Any] = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab, jnp.int32),
+    }
+    if cfg.mrope_sections is not None:
+        pos = jnp.arange(seq, dtype=jnp.int32)[None, :, None]
+        b["positions3"] = jnp.broadcast_to(pos, (batch, seq, 3))
+    if cfg.n_enc_layers:
+        b["enc_embeds"] = jax.random.normal(
+            ks[1], (batch, cfg.enc_len, cfg.d_model), jnp.float32
+        ).astype(cfg.compute_dtype)
+    return b

@@ -1,0 +1,19 @@
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+# Smoke tests and benches must see ONE device (the dry-run subprocesses set
+# their own XLA_FLAGS) — assert that contract instead of setting flags here.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def fp32(cfg):
+    """Reduced configs in fp32 for tight numeric comparisons."""
+    return dataclasses.replace(cfg, param_dtype="float32",
+                               compute_dtype="float32")

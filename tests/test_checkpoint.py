@@ -1,0 +1,53 @@
+"""Checkpoint: roundtrip (hypothesis), atomicity, GC, async."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.ckpt import Checkpointer
+
+
+@given(st.lists(st.integers(1, 50), min_size=1, max_size=5),
+       st.sampled_from(["float32", "int32", "bfloat16"]))
+@settings(max_examples=20, deadline=None)
+def test_roundtrip_random_trees(dims, dtype):
+    rng = np.random.RandomState(sum(dims))
+    tree = {"w": {}, "step": jnp.asarray(3)}
+    for i, d in enumerate(dims):
+        arr = rng.randn(d, 4).astype(np.float32)
+        tree["w"][f"l{i}"] = jnp.asarray(arr).astype(dtype)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=False)
+        ck.save(1, tree)
+        out, man = ck.restore(tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_gc_keeps_k():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2, async_save=False)
+        t = {"a": jnp.ones(4)}
+        for s in (1, 2, 3, 4):
+            ck.save(s, t)
+        assert ck.all_steps() == [3, 4]
+
+
+def test_tmp_dirs_invisible():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=False)
+        ck.save(1, {"a": jnp.ones(2)})
+        (ck.dir / "step_0000000009.tmp").mkdir()
+        assert ck.latest_step() == 1
+
+
+def test_async_save_blocks_correctly():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_save=True)
+        ck.save(1, {"a": jnp.arange(100000.)})
+        ck.wait()
+        out, man = ck.restore({"a": jnp.zeros(100000)})
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(100000.))

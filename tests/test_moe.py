@@ -1,0 +1,57 @@
+"""MoE dispatch: sort-based capacity path vs dense oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import moe as M
+from repro.models import transformer as T
+
+
+def make_cfg(E=8, k=2, shared=0, cf=8.0):
+    return ModelConfig(
+        name="t", family="moe", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, head_dim=8, d_ff=64, vocab=64,
+        moe=MoEConfig(n_experts=E, top_k=k, d_ff=32, shared_expert_ff=shared,
+                      capacity_factor=cf))
+
+
+@pytest.mark.parametrize("E,k,shared", [(8, 2, 0), (16, 1, 32), (4, 4, 0)])
+def test_moe_matches_dense_oracle(E, k, shared, rng):
+    cfg = make_cfg(E, k, shared, cf=float(E))   # capacity ~= no drops
+    key = jax.random.PRNGKey(0)
+    from repro.models.params import init_params
+    p = init_params(key, M.moe_specs(cfg))
+    x = jnp.asarray(rng.randn(2, 16, 32).astype(np.float32) * 0.5)
+    y, aux = M.moe_mlp(p, x, cfg)
+    yr, auxr = M.moe_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(float(aux), float(auxr), rtol=1e-4)
+
+
+def test_capacity_drops_are_bounded(rng):
+    cfg = make_cfg(8, 2, 0, cf=1.0)
+    key = jax.random.PRNGKey(0)
+    from repro.models.params import init_params
+    p = init_params(key, M.moe_specs(cfg))
+    x = jnp.asarray(rng.randn(4, 64, 32).astype(np.float32))
+    y, _ = M.moe_mlp(p, x, cfg)
+    # even with drops output must be finite and mostly nonzero
+    ya = np.asarray(y, np.float32)
+    assert np.isfinite(ya).all()
+    assert (np.abs(ya).sum(-1) > 0).mean() > 0.5
+
+
+def test_router_normalizes_gates(rng):
+    cfg = make_cfg(8, 4)
+    key = jax.random.PRNGKey(0)
+    from repro.models.params import init_params
+    p = init_params(key, M.moe_specs(cfg))
+    x2 = jnp.asarray(rng.randn(32, 32).astype(np.float32))
+    gate, idx, aux = M._router(p, x2, cfg.moe)
+    np.testing.assert_allclose(np.asarray(gate.sum(-1)), 1.0, rtol=1e-5)
+    assert int(idx.max()) < 8 and float(aux) > 0

@@ -1,0 +1,78 @@
+"""Sharding resolver properties over the production mesh shapes."""
+import types
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import ShardingRules, resolve
+
+
+def fake_mesh(shape, axes):
+    return types.SimpleNamespace(axis_names=axes, devices=np.zeros(shape))
+
+
+SP = fake_mesh((16, 16), ("data", "model"))
+MP = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+TRAIN = ShardingRules("train")
+SERVE = ShardingRules("serve")
+
+
+def flat_axes(spec):
+    out = []
+    for e in spec:
+        if e is None:
+            continue
+        out.extend(e if isinstance(e, tuple) else (e,))
+    return out
+
+
+def test_param_fsdp_tp():
+    # wq [d_model, heads, hd]: embed->fsdp(data/pod), heads->model
+    spec = resolve((4096, 64, 128), ("embed", "q_heads", "head_dim"), MP,
+                   TRAIN, "param")
+    assert spec[1] == "model"
+    assert set(flat_axes(spec)) == {"pod", "data", "model"}
+
+
+def test_kv_heads_indivisible_replicates():
+    spec = resolve((2, 128, 1, 256), ("batch", "kv_seq", "kv_heads", None),
+                   SP, SERVE, "act")
+    assert spec[2] is None                     # kv=1 can't shard over 16
+
+
+def test_long_context_kv_seq_soaks_axes():
+    spec = resolve((1, 524288, 1, 256), ("batch", "kv_seq", "kv_heads", None),
+                   MP, SERVE, "act")
+    assert spec[0] is None                     # batch 1
+    assert set(flat_axes(spec)) == {"pod", "data", "model"}
+
+
+def test_serve_mode_keeps_params_replicated_over_data():
+    spec = resolve((4096, 14336), ("embed", "ff"), SP, SERVE, "param")
+    assert spec[1] == "model" and spec[0] is None
+
+
+@given(st.lists(st.sampled_from(
+    ["batch", "embed", "ff", "vocab", "q_heads", "kv_heads", "kv_seq",
+     "experts", None]), min_size=1, max_size=4, unique=True),
+    st.data())
+@settings(max_examples=200, deadline=None)
+def test_no_mesh_axis_used_twice(axes, data):
+    shape = tuple(data.draw(st.sampled_from([1, 2, 3, 16, 128, 256, 4096]))
+                  for _ in axes)
+    for mesh in (SP, MP):
+        for rules in (TRAIN, SERVE):
+            for kind in ("param", "act"):
+                spec = resolve(shape, tuple(axes), mesh, rules, kind)
+                used = flat_axes(spec)
+                assert len(used) == len(set(used)), (axes, shape, spec)
+                # divisibility always respected
+                sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+                for dim, e in zip(shape, spec):
+                    if e is None:
+                        continue
+                    prod = int(np.prod([sizes[a] for a in
+                                        (e if isinstance(e, tuple) else (e,))]))
+                    assert dim % prod == 0, (dim, e)
