@@ -30,22 +30,31 @@ def row(name: str, us_per_call: float, derived: str = ""):
 
 # ---------------------------------------------------------------------------
 def fig5_speedup(steps: int = 3, grid=(16, 16, 16)):
-    """Paper Fig 5: FOM (s/time-step) per execution mode, normalized."""
+    """Paper Fig 5: FOM (s/time-step) per execution policy, normalized.
+
+    ``adaptive`` is the beyond-paper mode the regions API enables: the
+    TARGET_CUT_OFF clause running *inside* an executor, with its host/device
+    routing counts in the same coverage report as the staging fractions."""
     from repro.cfd.grid import Grid
     from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
-    from repro.core.executors import (DiscreteExecutor, HostExecutor,
-                                      UnifiedExecutor)
+    from repro.core.regions import (AdaptivePolicy, DiscretePolicy, Executor,
+                                    HostPolicy, UnifiedPolicy)
     cfg = SimpleConfig(grid=Grid(grid), nu=0.1, inner_max=15)
     fom = {}
-    for name, cls in (("host", HostExecutor), ("discrete", DiscreteExecutor),
-                      ("unified", UnifiedExecutor)):
-        app = SimpleFoam(cfg, executor=cls())
+    policies = (("host", HostPolicy), ("discrete", DiscretePolicy),
+                ("unified", UnifiedPolicy),
+                ("adaptive", lambda: AdaptivePolicy(cutoff=1024)))
+    for name, make in policies:
+        app = SimpleFoam(cfg, executor=Executor(make()))
         st = init_state(cfg)
         st, _, _ = app.run_steps(st, 1)      # warm caches
         app.ledger.reset_timings()
         _, f, _ = app.run_steps(st, steps)
         fom[name] = f
-        row(f"fig5/{name}_fom", f * 1e6, f"s_per_step={f:.4f}")
+        rep = app.ex.report()
+        row(f"fig5/{name}_fom", f * 1e6,
+            f"s_per_step={f:.4f};host_calls={rep['host_calls']}"
+            f";device_calls={rep['device_calls']}")
     for name in ("host", "discrete"):
         row(f"fig5/speedup_unified_vs_{name}", 0.0,
             f"x{fom[name] / fom['unified']:.2f}")
@@ -56,11 +65,11 @@ def fig6_migration(steps: int = 2, grid=(16, 16, 16)):
     """Paper Fig 6: fraction of step time in staging (page migration)."""
     from repro.cfd.grid import Grid
     from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
-    from repro.core.executors import DiscreteExecutor, UnifiedExecutor
+    from repro.core.regions import DiscretePolicy, Executor, UnifiedPolicy
     cfg = SimpleConfig(grid=Grid(grid), nu=0.1, inner_max=15)
-    for name, cls in (("discrete", DiscreteExecutor),
-                      ("unified", UnifiedExecutor)):
-        app = SimpleFoam(cfg, executor=cls())
+    for name, cls in (("discrete", DiscretePolicy),
+                      ("unified", UnifiedPolicy)):
+        app = SimpleFoam(cfg, executor=Executor(cls()))
         st = init_state(cfg)
         st, _, _ = app.run_steps(st, 1)
         app.ledger.reset_timings()
@@ -113,12 +122,14 @@ def pool_bench(n: int = 200, shape=(1 << 20,)):
 
 
 def dispatch_bench():
-    """TARGET_CUT_OFF calibration (listings 4-6)."""
+    """TARGET_CUT_OFF calibration (listings 4-6); the chosen cutoff is
+    recorded with the region's ledger row."""
     from repro.core.dispatch import TargetDispatch
-    td = TargetDispatch(lambda x: x * 2.0 + 1.0)
+    td = TargetDispatch(lambda x: x * 2.0 + 1.0, name="saxpy")
     cut = td.calibrate(lambda n: (jnp.ones(n),),
                        sizes=(256, 1024, 4096, 16384, 65536, 262144))
-    row("dispatch/target_cutoff", 0.0, f"cutoff={cut}")
+    recorded = td.ledger.coverage_report()["cutoffs"]
+    row("dispatch/target_cutoff", 0.0, f"cutoff={cut};ledger={recorded}")
 
 
 def kernel_bench(grid=(64, 64, 64), reps: int = 20):
@@ -163,8 +174,8 @@ def solver_bench(grid=(32, 32, 32)):
     from repro.cfd.precond import rb_dilu_factor
     from repro.cfd.solvers import (make_solver_regions, pbicgstab_fused,
                                    pbicgstab_regions)
-    from repro.core.executors import UnifiedExecutor
     from repro.core.ledger import Ledger
+    from repro.core.regions import Executor, UnifiedPolicy
     g = Grid(grid)
     A, _ = fvm.laplacian(g, 1.0)
     b = jnp.ones(g.shape, jnp.float32)
@@ -172,7 +183,7 @@ def solver_bench(grid=(32, 32, 32)):
     P = rb_dilu_factor(A, red)
     ldg = Ledger("bench")
     regions = make_solver_regions(ldg)
-    ex = UnifiedExecutor(ldg)
+    ex = Executor(UnifiedPolicy(), ldg)
     pbicgstab_regions(ex, regions, A, b, jnp.zeros_like(b), P, tol=1e-6)
     t0 = time.perf_counter()
     r = pbicgstab_regions(ex, regions, A, b, jnp.zeros_like(b), P, tol=1e-6)

@@ -12,50 +12,55 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.ledger import Ledger, offload_region
+from repro.core.ledger import Ledger
+from repro.core.regions import region
 
 
 def make_field_ops(ledger: Ledger = None, use_kernel: bool = False):
-    """Region-decorated field macros (one ledger per app instance)."""
-    kw = dict(ledger=ledger) if ledger is not None else {}
+    """Region-decorated field macros (one ledger per app instance).
+
+    A fresh Ledger per call when none is given: repeated factory calls
+    against the process-global ledger would accumulate uniquified rows
+    (dot#2, dot#3, ...) without bound."""
+    kw = dict(ledger=ledger or Ledger("field_ops"))
 
     if use_kernel:
         from repro.kernels.fused_field import ops as K
 
-    @offload_region("F_OP_F_OP_F(axpy)", **kw)
+    @region("F_OP_F_OP_F(axpy)", **kw)
     def axpy(a, x, y):
         """y + a*x — the daxpy of listing 2."""
         if use_kernel:
             return K.fused_axpy(a, x, y)
         return y + a * x
 
-    @offload_region("F_OP_F_OP_F(xpay)", **kw)
+    @region("F_OP_F_OP_F(xpay)", **kw)
     def xpay(a, x, y):
         """x + a*y (PBiCGStab's p-update shape)."""
         if use_kernel:
             return K.fused_xpay(a, x, y)
         return x + a * y
 
-    @offload_region("F_OP_F_OP_F(axpbypz)", **kw)
+    @region("F_OP_F_OP_F(axpbypz)", **kw)
     def axpbypz(a, x, b, y, z):
         """z + a*x + b*y (momentum corrector shape, listing 3 line 32)."""
         return z + a * x + b * y
 
-    @offload_region("F_MUL_F", **kw)
+    @region("F_MUL_F", **kw)
     def fmul(x, y):
         if use_kernel:
             return K.fused_mul(x, y)
         return x * y
 
-    @offload_region("dot", **kw)
+    @region("dot", **kw)
     def dot(x, y):
         return jnp.sum(x.astype(jnp.float64) * y.astype(jnp.float64))
 
-    @offload_region("norm2", **kw)
+    @region("norm2", **kw)
     def norm2(x):
         return jnp.sqrt(jnp.sum(x.astype(jnp.float64) ** 2))
 
-    @offload_region("sumMag", **kw)
+    @region("sumMag", **kw)
     def summag(x):
         return jnp.sum(jnp.abs(x.astype(jnp.float64)))
 

@@ -28,8 +28,8 @@ from repro.cfd.grid import Grid
 from repro.cfd.precond import rb_dilu_factor
 from repro.cfd.solvers import (make_solver_regions, pbicgstab_fused,
                                pbicgstab_regions)
-from repro.core.executors import BaseExecutor, UnifiedExecutor
-from repro.core.ledger import Ledger, offload_region
+from repro.core.ledger import Ledger
+from repro.core.regions import Executor, UnifiedPolicy, region
 
 
 @dataclasses.dataclass
@@ -62,21 +62,21 @@ def init_state(cfg: SimpleConfig) -> SimpleState:
 class SimpleFoam:
     """Region-program version of the solver, replayable by any executor."""
 
-    def __init__(self, cfg: SimpleConfig, executor: Optional[BaseExecutor] = None,
+    def __init__(self, cfg: SimpleConfig, executor: Optional[Executor] = None,
                  assemble_on_host: bool = False):
         """assemble_on_host=True reproduces the PETSc-interface mode of
         Fig 2: matrix assembly regions stay on the host; only solver kernels
         are offloaded."""
         self.cfg = cfg
         self.ledger = Ledger("simpleFoam")
-        self.ex = executor or UnifiedExecutor(self.ledger)
+        self.ex = executor or Executor(UnifiedPolicy(), self.ledger)
         self.ex.ledger = self.ledger
         self.ops = make_field_ops(self.ledger)
         self.solver_regions = make_solver_regions(self.ledger)
         self.red, self.black = cfg.grid.red_black_masks()
         asm = dict(ledger=self.ledger)
 
-        @offload_region("assemble(momentum)", offloaded=not assemble_on_host,
+        @region("assemble(momentum)", offloaded=not assemble_on_host,
                         **asm)
         def assemble_momentum(u, v, w, p):
             g = cfg.grid
@@ -94,7 +94,7 @@ class SimpleFoam:
             Aw, rw = fvm.relax(A, w, rhs_w, cfg.alpha_u)
             return (Au.diag, Au.off, ru, Av.diag, rv, Aw.diag, rw)
 
-        @offload_region("assemble(pressure)", offloaded=not assemble_on_host,
+        @region("assemble(pressure)", offloaded=not assemble_on_host,
                         **asm)
         def assemble_pressure(rAU, u_s, v_s, w_s):
             g = cfg.grid
@@ -111,21 +111,21 @@ class SimpleFoam:
             rhs = jnp.where(pin > 0, 0.0, -div_hbya)
             return (diag, off, rhs)
 
-        @offload_region("DILU factor", **asm)
+        @region("DILU factor", **asm)
         def factor(diag, off):
             P = rb_dilu_factor(DiaMatrix(diag, off), self.red)
             return P.rdiag
 
-        @offload_region("momentum corrector", **asm)
+        @region("momentum corrector", **asm)
         def correct_u(hb_u, hb_v, hb_w, rAU, gpx, gpy, gpz):
             # U = HbyA - rAU*grad(p)   (listing 3 line 32 == listing 4 macro)
             return (hb_u - rAU * gpx, hb_v - rAU * gpy, hb_w - rAU * gpz)
 
-        @offload_region("grad(p)", **asm)
+        @region("grad(p)", **asm)
         def grad_p(p):
             return tuple(fvc.grad(cfg.grid, p))
 
-        @offload_region("p relax", **asm)
+        @region("p relax", **asm)
         def relax_p(p, dp):
             # dp is the pressure CORRECTION from the Poisson solve
             return p + cfg.alpha_p * dp

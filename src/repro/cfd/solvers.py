@@ -23,7 +23,8 @@ import jax.numpy as jnp
 
 from repro.cfd.dia import DiaMatrix, amul_ref
 from repro.cfd.precond import RBDilu, jacobi_apply, rb_dilu_apply, rb_dilu_factor
-from repro.core.ledger import Ledger, offload_region
+from repro.core.ledger import Ledger
+from repro.core.regions import region
 
 SMALL = 1e-20
 
@@ -42,33 +43,35 @@ class SolveResult:
 # ---------------------------------------------------------------------------
 
 def make_solver_regions(ledger: Optional[Ledger] = None):
-    kw = dict(ledger=ledger) if ledger is not None else {}
+    # fresh Ledger when none given — repeated factory calls must not grow
+    # the process-global ledger with uniquified duplicate rows
+    kw = dict(ledger=ledger or Ledger("solver_regions"))
 
-    @offload_region("Amul", **kw)
+    @region("Amul", **kw)
     def amul_r(diag, off, x):
         return amul_ref(DiaMatrix(diag, off), x)
 
-    @offload_region("precondition(DILU)", **kw)
+    @region("precondition(DILU)", **kw)
     def precond_r(rdiag, red, off, r):
         return rb_dilu_apply(RBDilu(rdiag, red), DiaMatrix(rdiag * 0, off), r)
 
-    @offload_region("sA=rA-alpha*AyA", **kw)
+    @region("sA=rA-alpha*AyA", **kw)
     def saxpy_r(a, x, y):
         return y - a * x
 
-    @offload_region("x+=a*yA+w*zA", **kw)
+    @region("x+=a*yA+w*zA", **kw)
     def update_x_r(x, a, yA, w, zA):
         return x + a * yA + w * zA
 
-    @offload_region("p=r+beta*(p-w*v)", **kw)
+    @region("p=r+beta*(p-w*v)", **kw)
     def update_p_r(r, beta, p, w, v):
         return r + beta * (p - w * v)
 
-    @offload_region("dot", **kw)
+    @region("dot", **kw)
     def dot_r(x, y):
         return jnp.sum(x.astype(jnp.float64) * y.astype(jnp.float64))
 
-    @offload_region("sumMag", **kw)
+    @region("sumMag", **kw)
     def summag_r(x):
         return jnp.sum(jnp.abs(x.astype(jnp.float64)))
 

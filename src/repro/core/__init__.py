@@ -1,15 +1,26 @@
 """The paper's contribution as a first-class runtime:
 
 C1 unified memory  -> repro.core.umem       (MemSpace, UnifiedArena, placement)
-C2 incremental     -> repro.core.ledger     (offload_region, coverage)
-C3 adaptive switch -> repro.core.dispatch   (TargetDispatch / TARGET_CUT_OFF)
+C2 incremental     -> repro.core.ledger     (Ledger, coverage + routing stats)
+C3 adaptive switch -> repro.core.regions    (SizeRouter / AdaptivePolicy)
 C4 memory pooling  -> repro.core.pool       (HostStagingPool, DeviceBufferPool)
-§5 measurement     -> repro.core.executors  (unified / discrete / host)
+§5 measurement     -> repro.core.regions    (Unified/Discrete/Host policies)
+
+``repro.core.regions`` is the canonical API: Region + ExecutionPolicy
+(placement x routing x staging) run by one Executor.  ``executors`` and
+``dispatch`` re-export deprecated shims over it.
 """
-from repro.core.dispatch import TargetDispatch, offload, DEFAULT_CUTOFF
+from repro.core.dispatch import DispatchStats, TargetDispatch, offload
 from repro.core.executors import (DiscreteExecutor, HostExecutor,
                                   UnifiedExecutor, make_executor)
-from repro.core.ledger import GLOBAL_LEDGER, Ledger, offload_region
+from repro.core.ledger import GLOBAL_LEDGER, Ledger, RegionRecord, offload_region
 from repro.core.pool import (DeviceBufferPool, HostStagingPool,
                              POOL_MIN_ELEMS, PoolStats)
-from repro.core.umem import MemSpace, UnifiedArena, place, tree_place
+from repro.core.regions import (DEFAULT_CUTOFF, AdaptivePolicy, ComposedPolicy,
+                                DiscretePolicy, ExecutionPolicy, Executor,
+                                HostPolicy, MigrationStager, NullStager,
+                                Placer, Region, SizeRouter, StaticRouter,
+                                UnifiedPolicy, as_region, default_size,
+                                make_policy, region)
+from repro.core.umem import (MemSpace, UnifiedArena, place, place_like,
+                             preferred_host_space, tree_place)

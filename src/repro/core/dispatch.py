@@ -1,37 +1,39 @@
 """Adaptive host/device dispatch — the ``if(target: n > TARGET_CUT_OFF)``
-OpenMP clause (paper C3, listings 4-6) as a JAX combinator.
+OpenMP clause (paper C3, listings 4-6).
 
-The same function is compiled twice — once pinned to the host CPU backend,
-once for the accelerator backend — and each call is routed by problem size.
-On an APU (and on our CPU container) switching sides is nearly free because
-no data movement is implied; on a discrete system the runtime would charge
-staging, which is exactly what the executors in ``repro.core.executors``
-measure.
+The routing logic itself now lives in ``repro.core.regions``
+(:class:`SizeRouter` / :class:`AdaptivePolicy`), where it composes with any
+executor's placement and staging axes.  :class:`TargetDispatch` survives as
+a standalone shim — one Region driven by one AdaptivePolicy executor — and
+its per-call accounting lands in a :class:`~repro.core.ledger.Ledger`
+instead of a private stats object, so host/device call counts show up in
+the same ``coverage_report()`` as staging fractions.  Counts only: like
+the pre-regions dispatcher, ``__call__`` stays asynchronous (no
+block_until_ready), so it cannot time itself — run the region through an
+``Executor(AdaptivePolicy(...))`` when timed coverage is wanted.
 
-``calibrate()`` reproduces the paper's empirical choice of TARGET_CUT_OFF by
-timing both executables over a size ladder and picking the crossover.
+``calibrate()`` reproduces the paper's empirical choice of TARGET_CUT_OFF
+by timing both executables over a size ladder, picking the crossover, and
+recording it with the region's ledger row.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional, Sequence
 
-import jax
-import numpy as np
+from repro.core.ledger import Ledger
+from repro.core.regions import (DEFAULT_CUTOFF, AdaptivePolicy, Executor,
+                                default_size, region as _region)
 
-DEFAULT_CUTOFF = 16384
-
-
-def _default_size(args, kwargs) -> int:
-    for a in jax.tree.leaves((args, kwargs)):
-        if hasattr(a, "size"):
-            return int(a.size)
-    return 0
+# legacy alias; sizing now uses the LARGEST leaf, so a scalar first argument
+# no longer forces host routing regardless of field size
+_default_size = default_size
 
 
 @dataclasses.dataclass
 class DispatchStats:
+    """Deprecated read-only view assembled from the ledger's RegionRecord
+    (routing accounting was folded into the Ledger)."""
     host_calls: int = 0
     device_calls: int = 0
     host_elems: int = 0
@@ -45,62 +47,90 @@ class DispatchStats:
 
 class TargetDispatch:
     """``TargetDispatch(f, cutoff)(x)`` == OpenMP
-    ``target teams distribute parallel for if(target: x.size > cutoff)``."""
+    ``target teams distribute parallel for if(target: x.size > cutoff)``.
+
+    Shim over ``Executor(AdaptivePolicy(cutoff), ledger)`` running a single
+    Region; pass ``ledger=`` to land its routing decisions in a shared
+    coverage report."""
 
     def __init__(self, fn: Callable, cutoff: int = DEFAULT_CUTOFF,
-                 size_fn: Callable = None, name: Optional[str] = None):
-        self.name = name or getattr(fn, "__name__", "region")
-        self.cutoff = cutoff
-        self.size_fn = size_fn or _default_size
-        self._jitted = jax.jit(fn)
-        self._host_dev = jax.devices("cpu")[0]
-        accel = [d for d in jax.devices() if d.platform != "cpu"]
-        self._accel_dev = accel[0] if accel else jax.devices()[0]
-        self.stats = DispatchStats()
+                 size_fn: Callable = None, name: Optional[str] = None,
+                 ledger: Optional[Ledger] = None):
+        rname = name or getattr(fn, "__name__", "region")
+        self.ledger = ledger or Ledger(f"dispatch:{rname}")
+        self.region = _region(rname, ledger=self.ledger,
+                              size_fn=size_fn)(fn)
+        self.policy = AdaptivePolicy(cutoff=cutoff)
+        self.executor = Executor(self.policy, self.ledger)
+        self.name = self.region.name
 
-    def _run_on(self, device, args, kwargs):
-        with jax.default_device(device):
-            return self._jitted(*args, **kwargs)
+    @property
+    def cutoff(self) -> int:
+        return self.policy.cutoff
+
+    @cutoff.setter
+    def cutoff(self, value: int) -> None:
+        self.policy.cutoff = value
+
+    @property
+    def size_fn(self) -> Callable:
+        return self.region.size_fn
+
+    @size_fn.setter
+    def size_fn(self, fn: Callable) -> None:
+        # forward to the region so post-construction overrides keep routing
+        # (the pre-regions implementation read self.size_fn on every call)
+        self.region.size_fn = fn or default_size
+
+    @property
+    def stats(self) -> DispatchStats:
+        """Snapshot of the ledger row (a fresh object per access — hold the
+        dispatcher, not a stats reference, to observe updates)."""
+        r = self.ledger.regions.get(self.region.name)
+        if r is None:                      # pragma: no cover
+            return DispatchStats()
+        return DispatchStats(host_calls=r.host_calls,
+                             device_calls=r.device_calls,
+                             host_elems=r.host_elems,
+                             device_elems=r.device_elems)
+
+    @stats.setter
+    def stats(self, value: DispatchStats) -> None:
+        # the old reset idiom `td.stats = DispatchStats()` writes through
+        # to the ledger row
+        r = self.ledger.region(self.region.name)
+        r.host_calls = value.host_calls
+        r.device_calls = value.device_calls
+        r.host_elems = value.host_elems
+        r.device_elems = value.device_elems
+        r.calls = value.host_calls + value.device_calls
 
     def __call__(self, *args, **kwargs):
-        n = self.size_fn(args, kwargs)
-        if n > self.cutoff:
-            self.stats.device_calls += 1
-            self.stats.device_elems += n
-            return self._run_on(self._accel_dev, args, kwargs)
-        self.stats.host_calls += 1
-        self.stats.host_elems += n
-        return self._run_on(self._host_dev, args, kwargs)
+        # routing + counts only, no block_until_ready: like the pre-regions
+        # dispatcher, calls stay asynchronous so back-to-back dispatched ops
+        # overlap; use `self.executor.run(self.region, ...)` for timed runs
+        r = self.region
+        n = r.size_fn(args, kwargs)
+        tgt = self.policy.router.target(r, args, kwargs, size=n)
+        out = r.executable(tgt)(*args, **kwargs)
+        self.ledger.record(r.name, device=(tgt == "device"),
+                           offloaded=r.offloaded, compute_s=0.0, elems=n)
+        return out
 
     # ------------------------------------------------------------------
     def calibrate(self, make_args: Callable[[int], tuple],
                   sizes: Sequence[int] = (256, 1024, 4096, 16384, 65536),
                   reps: int = 20) -> int:
-        """Time host vs device executables per size; set cutoff = crossover."""
-        crossover = self.cutoff
-        for n in sorted(sizes):
-            args = make_args(n)
-            ts = {}
-            for dev_name, dev in (("host", self._host_dev),
-                                  ("dev", self._accel_dev)):
-                r = self._run_on(dev, args, {})
-                jax.block_until_ready(r)
-                t0 = time.perf_counter()
-                for _ in range(reps):
-                    r = self._run_on(dev, args, {})
-                jax.block_until_ready(r)
-                ts[dev_name] = (time.perf_counter() - t0) / reps
-            if ts["dev"] < ts["host"]:
-                crossover = n
-                break
-        else:
-            crossover = max(sizes) + 1
-        self.cutoff = crossover
-        return crossover
+        """Time host vs device executables per size; set cutoff = crossover
+        and record it into the ledger."""
+        return self.policy.calibrate(self.region, make_args, sizes=sizes,
+                                     reps=reps, ledger=self.ledger)
 
 
-def offload(fn=None, *, cutoff: int = DEFAULT_CUTOFF, size_fn=None, name=None):
+def offload(fn=None, *, cutoff: int = DEFAULT_CUTOFF, size_fn=None, name=None,
+            ledger=None):
     """Decorator form: the one-line directive of listings 4-6."""
     def wrap(f):
-        return TargetDispatch(f, cutoff=cutoff, size_fn=size_fn, name=name)
+        return TargetDispatch(f, cutoff=cutoff, size_fn=size_fn, name=name,
+                              ledger=ledger)
     return wrap(fn) if fn is not None else wrap

@@ -1,119 +1,55 @@
-"""Execution modes over the same region program (paper §5, Figs 5-6).
+"""Deprecated execution-mode shims (paper §5, Figs 5-6).
 
-The paper's measurement: identical OpenFOAM source, three platforms —
-dCPU (host only), dGPU + managed memory (every host<->device alternation
-pays page migration), APU (unified physical memory, no migration). Here the
-three executors run the *same* jitted regions and differ only in data
-motion:
+The three §5 execution modes — APU / managed-memory dGPU / dCPU — now live
+in ``repro.core.regions`` as :class:`ExecutionPolicy` instances
+(``UnifiedPolicy`` / ``DiscretePolicy`` / ``HostPolicy``) run by one
+:class:`~repro.core.regions.Executor`.  This module keeps the old class
+names and ``make_executor`` as thin shims so pre-regions call sites keep
+working; new code should construct ``Executor(UnifiedPolicy(), ledger)``
+directly.
 
-* ``UnifiedExecutor``  — APU model. Operands stay where they are; regions
-  run back-to-back. Zero staging cost by construction.
-* ``DiscreteExecutor`` — managed-memory dGPU model. Every offloaded region
-  is bracketed by REAL copies between the host arena (``pinned_host``) and
-  the device arena (``device`` memory kind): operands in, results out —
-  that is what fine-grained CPU/GPU alternation costs when memory is not
-  physically unified. Copy time/bytes land in the ledger as staging (the
-  paper's >65% migration fraction, Fig 6).
-* ``HostExecutor``     — dCPU model: regions marked offloaded still run,
-  but on the host executable; no staging.
-
-The FOM ratio unified/discrete over the CFD case study reproduces the
-paper's Fig 5 claim structure.
+Return contract (uniform across modes): ``run`` returns jax Arrays.  The
+old ``DiscreteExecutor`` returned numpy, silently changing downstream types
+per mode; the discrete *policy* instead stages results into host-space jax
+Arrays — same host-memory semantics, one type contract.
 """
 from __future__ import annotations
 
-import time
-from typing import Any
-
-import jax
+from typing import Optional
 
 from repro.core.ledger import Ledger
 from repro.core.pool import DeviceBufferPool
+from repro.core.regions import (DiscretePolicy, Executor, HostPolicy,
+                                UnifiedPolicy, make_policy)
 from repro.core.umem import UnifiedArena
 
-
-class BaseExecutor:
-    mode = "base"
-
-    def __init__(self, ledger: Ledger = None):
-        self.ledger = ledger or Ledger(self.mode)
-
-    def run(self, region, *args, **kwargs):
-        raise NotImplementedError
-
-    def report(self) -> dict:
-        rep = self.ledger.coverage_report()
-        rep["mode"] = self.mode
-        return rep
+BaseExecutor = Executor          # deprecated alias
 
 
-class UnifiedExecutor(BaseExecutor):
-    mode = "unified"
+class UnifiedExecutor(Executor):
+    """Deprecated shim: ``Executor(UnifiedPolicy(), ledger)``."""
 
-    def run(self, region, *args, **kwargs):
-        t0 = time.perf_counter()
-        out = region.jitted(*args, **kwargs)
-        jax.block_until_ready(out)
-        self.ledger.record(region.region_name, device=region.offloaded,
-                           offloaded=region.offloaded,
-                           compute_s=time.perf_counter() - t0)
-        return out
+    def __init__(self, ledger: Optional[Ledger] = None):
+        super().__init__(UnifiedPolicy(), ledger)
 
 
-class HostExecutor(BaseExecutor):
-    mode = "host"
+class HostExecutor(Executor):
+    """Deprecated shim: ``Executor(HostPolicy(), ledger)``."""
 
-    def __init__(self, ledger: Ledger = None):
-        super().__init__(ledger)
-        self._host = jax.devices("cpu")[0]
-
-    def run(self, region, *args, **kwargs):
-        t0 = time.perf_counter()
-        with jax.default_device(self._host):
-            out = region.jitted(*args, **kwargs)
-        jax.block_until_ready(out)
-        self.ledger.record(region.region_name, device=False, offloaded=False,
-                           compute_s=time.perf_counter() - t0)
-        return out
+    def __init__(self, ledger: Optional[Ledger] = None):
+        super().__init__(HostPolicy(), ledger)
 
 
-class DiscreteExecutor(BaseExecutor):
-    """Managed-memory dGPU emulation with real inter-space copies."""
-    mode = "discrete"
+class DiscreteExecutor(Executor):
+    """Deprecated shim: ``Executor(DiscretePolicy(...), ledger)``."""
 
-    def __init__(self, ledger: Ledger = None, arena: UnifiedArena = None,
-                 pool: DeviceBufferPool = None):
-        super().__init__(ledger)
-        self.arena = arena or UnifiedArena()
-        self.pool = pool or DeviceBufferPool()
-
-    def run(self, region, *args, **kwargs):
-        name = region.region_name
-        if not region.offloaded:
-            t0 = time.perf_counter()
-            out = region.jitted(*args, **kwargs)
-            jax.block_until_ready(out)
-            self.ledger.record(name, device=False, offloaded=False,
-                               compute_s=time.perf_counter() - t0)
-            return out
-        # ---- page-migration emulation: host -> device ----
-        t0 = time.perf_counter()
-        d_args, d_kwargs = self.arena.to_device((args, kwargs))
-        jax.block_until_ready((d_args, d_kwargs))
-        t1 = time.perf_counter()
-        out = region.jitted(*d_args, **d_kwargs)
-        jax.block_until_ready(out)
-        t2 = time.perf_counter()
-        # ---- results migrate back as HOST (numpy) values: the host code
-        # that runs next sees plain host memory, as on a managed-memory dGPU
-        out_h = jax.device_get(out)
-        t3 = time.perf_counter()
-        nbytes = self.arena.bytes_of((args, kwargs)) + self.arena.bytes_of(out)
-        self.ledger.record(name, device=True, offloaded=True,
-                           compute_s=t2 - t1,
-                           staging_s=(t1 - t0) + (t3 - t2),
-                           staging_bytes=nbytes)
-        return out_h
+    def __init__(self, ledger: Optional[Ledger] = None,
+                 arena: Optional[UnifiedArena] = None,
+                 pool: Optional[DeviceBufferPool] = None):
+        policy = DiscretePolicy(arena=arena, device_pool=pool)
+        super().__init__(policy, ledger)
+        self.arena = policy.arena
+        self.pool = policy.stager.device_pool
 
 
 EXECUTORS = {
@@ -123,5 +59,9 @@ EXECUTORS = {
 }
 
 
-def make_executor(mode: str, **kw) -> BaseExecutor:
-    return EXECUTORS[mode](**kw)
+def make_executor(mode: str, **kw) -> Executor:
+    """Deprecated: prefer ``Executor(make_policy(mode), ledger)``."""
+    if mode in EXECUTORS:
+        return EXECUTORS[mode](**kw)
+    ledger = kw.pop("ledger", None)
+    return Executor(make_policy(mode, **kw), ledger)

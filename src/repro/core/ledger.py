@@ -12,9 +12,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
-
-import jax
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -25,12 +23,22 @@ class RegionRecord:
     device_calls: int = 0
     host_calls: int = 0
     compute_s: float = 0.0
+    device_compute_s: float = 0.0       # compute split by routing side — a
+    host_compute_s: float = 0.0         # region may mix under AdaptivePolicy
     staging_s: float = 0.0              # discrete-emulation copy time
     staging_bytes: int = 0
+    host_elems: int = 0                 # routing accounting (was DispatchStats)
+    device_elems: int = 0
+    cutoff: Optional[int] = None        # calibrated TARGET_CUT_OFF, if any
 
     @property
     def total_s(self) -> float:
         return self.compute_s + self.staging_s
+
+    @property
+    def offload_fraction(self) -> float:
+        tot = self.host_elems + self.device_elems
+        return self.device_elems / tot if tot else 0.0
 
 
 class Ledger:
@@ -43,9 +51,24 @@ class Ledger:
             self.regions[name] = RegionRecord(name=name, offloaded=offloaded)
         return self.regions[name]
 
+    def register(self, name: str, offloaded: bool = True) -> str:
+        """Register a NEW region under a guaranteed-unique name.
+
+        Two anonymous regions sharing ``fn.__name__`` used to merge silently
+        into one record; registration now auto-uniquifies (``dot``, ``dot#2``,
+        ...) so every region owns its own row in the coverage report.
+        """
+        unique = name
+        k = 2
+        while unique in self.regions:
+            unique = f"{name}#{k}"
+            k += 1
+        self.regions[unique] = RegionRecord(name=unique, offloaded=offloaded)
+        return unique
+
     def record(self, name: str, *, device: bool, compute_s: float,
                staging_s: float = 0.0, staging_bytes: int = 0,
-               offloaded: bool = True) -> None:
+               offloaded: bool = True, elems: int = 0) -> None:
         r = self.region(name, offloaded)
         r.calls += 1
         r.device_calls += int(device)
@@ -53,19 +76,45 @@ class Ledger:
         r.compute_s += compute_s
         r.staging_s += staging_s
         r.staging_bytes += staging_bytes
+        if device:
+            r.device_compute_s += compute_s
+            r.device_elems += elems
+        else:
+            r.host_compute_s += compute_s
+            r.host_elems += elems
+
+    def set_cutoff(self, name: str, cutoff: int) -> None:
+        """Store a calibrated TARGET_CUT_OFF with the region it governs."""
+        self.region(name).cutoff = cutoff
 
     def reset_timings(self) -> None:
         for r in self.regions.values():
             r.calls = r.device_calls = r.host_calls = 0
             r.compute_s = r.staging_s = 0.0
+            r.device_compute_s = r.host_compute_s = 0.0
             r.staging_bytes = 0
+            r.host_elems = r.device_elems = 0
+
+    def clear(self) -> None:
+        """Drop all region rows. Long-lived processes that rebuild region
+        programs against one shared ledger (auto-uniquified names grow it)
+        should clear between generations — or give each app its own Ledger."""
+        self.regions.clear()
 
     # ------------------------------------------------------------------
     def coverage_report(self) -> dict:
         total = sum(r.total_s for r in self.regions.values())
-        dev = sum(r.compute_s for r in self.regions.values()
-                  if r.offloaded and r.device_calls)
+        # per-side compute, not whole rows: under adaptive routing one region
+        # mixes host and device calls, and a single device call must not
+        # re-attribute the row's host time (Fig 4 coverage would read ~1.0)
+        dev = sum(r.device_compute_s for r in self.regions.values()
+                  if r.offloaded)
         staging = sum(r.staging_s for r in self.regions.values())
+        host_calls = sum(r.host_calls for r in self.regions.values())
+        device_calls = sum(r.device_calls for r in self.regions.values())
+        host_elems = sum(r.host_elems for r in self.regions.values())
+        device_elems = sum(r.device_elems for r in self.regions.values())
+        elems = host_elems + device_elems
         return {
             "regions": len(self.regions),
             "offloaded_regions": sum(1 for r in self.regions.values()
@@ -75,6 +124,14 @@ class Ledger:
             "staging_s": staging,
             "device_fraction": dev / total if total else 0.0,
             "staging_fraction": staging / total if total else 0.0,  # Fig 6
+            # routing accounting (absorbed from dispatch.DispatchStats):
+            # every host/device decision — static or TARGET_CUT_OFF-adaptive —
+            # lands here, next to the staging fractions it trades against.
+            "host_calls": host_calls,
+            "device_calls": device_calls,
+            "offload_elem_fraction": device_elems / elems if elems else 0.0,
+            "cutoffs": {r.name: r.cutoff for r in self.regions.values()
+                        if r.cutoff is not None},
         }
 
     def table(self) -> List[dict]:
@@ -94,30 +151,15 @@ def timed_region(ledger: Ledger, name: str, device: bool = True,
 
 
 def offload_region(name: Optional[str] = None, *, offloaded: bool = True,
-                   ledger: Optional[Ledger] = None):
-    """Mark a function as one OpenMP-directive-sized region. The returned
-    wrapper is jitted and self-times into the ledger; executors can re-route
-    it (host/device/staged) without touching the function body — the
-    "one line per loop" porting experience of listings 4-6."""
-    ldg = ledger or GLOBAL_LEDGER
+                   ledger: Optional[Ledger] = None, **kw):
+    """Deprecated alias for :func:`repro.core.regions.region`.
 
-    def wrap(fn: Callable):
-        jfn = jax.jit(fn)
-        rname = name or getattr(fn, "__name__", "region")
-        ldg.region(rname, offloaded)
-
-        def runner(*args, **kwargs):
-            t0 = time.perf_counter()
-            out = jfn(*args, **kwargs)
-            jax.block_until_ready(out)
-            ldg.record(rname, device=offloaded, offloaded=offloaded,
-                       compute_s=time.perf_counter() - t0)
-            return out
-
-        runner.__name__ = rname
-        runner.region_name = rname
-        runner.offloaded = offloaded
-        runner.jitted = jfn
-        return runner
-
-    return wrap
+    Mark a function as one OpenMP-directive-sized region; the returned
+    :class:`~repro.core.regions.Region` is jitted, self-times into the ledger,
+    and can be re-routed (host/device/staged) by any executor without touching
+    the function body — the "one line per loop" porting experience of
+    listings 4-6. New code should import ``region`` from
+    ``repro.core.regions`` directly.
+    """
+    from repro.core.regions import region
+    return region(name, offloaded=offloaded, ledger=ledger, **kw)

@@ -131,9 +131,19 @@ class DeviceBufferPool:
         self.min_elems = min_elems
         self._free: Dict[tuple, list] = {}
         self.stats = PoolStats()
+        try:
+            self._default_kind = jax.devices()[0].default_memory().kind
+        except Exception:                   # pragma: no cover
+            self._default_kind = "device"
 
     def _key(self, shape, dtype, memory_kind):
-        return (tuple(shape), str(np.dtype(dtype)), memory_kind or "device")
+        # normalize the backend's default kind to "device" so release()
+        # (which reads the buffer's actual sharding kind) and acquire(None)
+        # agree on platforms whose default kind isn't named "device"
+        kind = memory_kind or "device"
+        if kind == self._default_kind:
+            kind = "device"
+        return (tuple(shape), str(np.dtype(dtype)), kind)
 
     def acquire(self, shape, dtype, memory_kind: Optional[str] = None):
         import jax.numpy as jnp

@@ -1,0 +1,611 @@
+"""One region, one policy: the canonical offload API (paper C1+C2+C3).
+
+The paper's central claim is that unified memory lets a *single* abstraction
+— "a region with a directive" — be retargeted across host, discrete-managed,
+and APU execution without touching application code.  This module is that
+abstraction:
+
+* :class:`Region` — one OpenMP-directive-sized unit of work: the function,
+  its per-target compiled executables, a problem-size measure (the ``n`` of
+  ``if(target: n > TARGET_CUT_OFF)``), the offload hint, and optional
+  :class:`~repro.core.umem.MemSpace` placement hints per argument / result.
+
+* :class:`ExecutionPolicy` — three orthogonal, composable axes:
+
+  - **placement** (:class:`Placer`): where operands/results nominally live,
+    expressed as ``MemSpace`` hints applied through ``umem`` (paper C1);
+  - **routing** (:class:`Router`): which executable runs this call — the
+    static host/device choice of the three §5 execution modes, or the
+    size-based ``TARGET_CUT_OFF`` clause absorbed from
+    ``repro.core.dispatch`` (paper C3, listings 4-6);
+  - **staging** (:class:`Stager`): what crossing the host/device boundary
+    costs — nothing on an APU, real out-of-place copies through pooled
+    buffers on a managed-memory dGPU (paper §5 Fig 6, C4).
+
+* :class:`Executor` — runs Regions under a policy and accounts every call
+  (where it ran, what it cost, how many elements were routed which way)
+  into one :class:`~repro.core.ledger.Ledger`, so routing decisions and
+  staging fractions appear in the same ``coverage_report()``.
+
+The old ``UnifiedExecutor`` / ``DiscreteExecutor`` / ``HostExecutor``
+classes and ``TargetDispatch`` survive as thin shims over policy instances
+(see ``repro.core.executors`` and ``repro.core.dispatch``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import weakref
+from typing import (Any, Callable, Dict, Mapping, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import umem
+from repro.core.ledger import GLOBAL_LEDGER, Ledger
+from repro.core.pool import DeviceBufferPool, HostStagingPool
+from repro.core.umem import MemSpace, UnifiedArena
+
+DEFAULT_CUTOFF = 16384          # the paper's empirical TARGET_CUT_OFF
+
+#: routing targets an executable can be compiled for
+TARGETS = ("default", "host", "device")
+
+
+def host_device():
+    return jax.devices("cpu")[0]
+
+
+def accel_device():
+    accel = [d for d in jax.devices() if d.platform != "cpu"]
+    return accel[0] if accel else jax.devices()[0]
+
+
+def _param_indices(fn: Callable) -> Dict[str, int]:
+    """Positional index of each named parameter, so placement hints keyed
+    by name apply to positionally-passed arguments too."""
+    try:
+        import inspect
+        return {name: i for i, name
+                in enumerate(inspect.signature(fn).parameters)}
+    except (ValueError, TypeError):         # builtins, odd callables
+        return {}
+
+
+def default_size(args, kwargs) -> int:
+    """Problem size of a call = size of the LARGEST array leaf.
+
+    The largest leaf, not the first: a small scalar leading argument (an
+    ``alpha``, a tolerance) must not force host routing for a call whose
+    field operands are millions of cells."""
+    sizes = [int(a.size) for a in jax.tree.leaves((args, kwargs))
+             if hasattr(a, "size")]
+    return max(sizes, default=0)
+
+
+# ---------------------------------------------------------------------------
+# Region
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)        # identity semantics: regions are
+class Region:                           # hashable, usable as dict/set keys
+    """One directive-sized region: fn + compiled executables + hints.
+
+    ``arg_spaces`` maps positional index or keyword name to a
+    :class:`MemSpace` placement hint; ``result_space`` hints where results
+    should land.  Hints are *advisory*: the executing policy's placement
+    axis decides whether (and above what byte threshold) to honor them.
+    """
+    name: str
+    fn: Callable
+    offloaded: bool = True
+    size_fn: Callable = default_size
+    arg_spaces: Optional[Mapping[Any, MemSpace]] = None
+    result_space: Optional[MemSpace] = None
+    ledger: Ledger = dataclasses.field(default_factory=lambda: GLOBAL_LEDGER)
+
+    def __post_init__(self):
+        if self.size_fn is None:
+            self.size_fn = default_size
+        self.name = self.ledger.register(self.name, self.offloaded)
+        # __name__ stays a valid identifier (regions may be named "grad(p)")
+        self.__name__ = getattr(self.fn, "__name__", "region")
+        self.__qualname__ = self.__name__
+        self._jitted = None
+        self._exec: Dict[str, Callable] = {}
+        self._param_index = _param_indices(self.fn)
+
+    # -- per-target compiled executables --------------------------------
+    @property
+    def jitted(self):
+        """The target-agnostic jitted executable (legacy shim attribute)."""
+        if self._jitted is None:
+            self._jitted = jax.jit(self.fn)
+        return self._jitted
+
+    @property
+    def region_name(self) -> str:
+        """Legacy shim attribute; prefer ``.name``."""
+        return self.name
+
+    def executable(self, target: str = "default") -> Callable:
+        """The compiled executable for one routing target.
+
+        ``default`` runs wherever operands already live (the APU model);
+        ``host``/``device`` pin the call to that backend — the two
+        executables of the paper's ``if(target: ...)`` clause."""
+        if target not in self._exec:
+            jfn = self.jitted
+            if target == "default":
+                call = jfn
+            else:
+                dev = host_device() if target == "host" else accel_device()
+
+                def call(*args, _jfn=jfn, _dev=dev, **kwargs):
+                    with jax.default_device(_dev):
+                        return _jfn(*args, **kwargs)
+
+            self._exec[target] = call
+        return self._exec[target]
+
+    # -- direct invocation ----------------------------------------------
+    def __call__(self, *args, **kwargs):
+        """Calling a region directly runs its default executable and
+        self-times into the ledger — the pre-executor behavior of
+        ``offload_region``'s runner closure."""
+        t0 = time.perf_counter()
+        out = self.jitted(*args, **kwargs)
+        jax.block_until_ready(out)
+        self.ledger.record(self.name, device=self.offloaded,
+                           offloaded=self.offloaded,
+                           compute_s=time.perf_counter() - t0,
+                           elems=self.size_fn(args, kwargs))
+        return out
+
+    # -- legacy adapter --------------------------------------------------
+    @classmethod
+    def from_legacy(cls, obj) -> "Region":
+        """Adapt a pre-regions closure (``.jitted``/``.offloaded``/
+        ``.region_name`` attributes) without re-registering it."""
+        r = cls.__new__(cls)
+        r.name = getattr(obj, "region_name",
+                         getattr(obj, "__name__", "region"))
+        r.fn = obj
+        r.offloaded = bool(getattr(obj, "offloaded", True))
+        r.size_fn = default_size
+        r.arg_spaces = None
+        r.result_space = None
+        r.ledger = GLOBAL_LEDGER
+        r._jitted = getattr(obj, "jitted", None) or jax.jit(obj)
+        r._exec = {}
+        r.__name__ = getattr(obj, "__name__", "region")
+        r.__qualname__ = r.__name__
+        r._param_index = {}
+        return r
+
+
+#: fallback adapter cache for legacy callables that reject attribute
+#: assignment (__slots__/frozen) — without it every run() would build a
+#: fresh Region and register a new uniquified ledger row
+_LEGACY_REGIONS = weakref.WeakKeyDictionary()
+
+
+def as_region(obj) -> Region:
+    """Coerce anything executable into a Region (identity for Regions)."""
+    if isinstance(obj, Region):
+        return obj
+    cached = getattr(obj, "_as_region", None)
+    if cached is not None:
+        return cached
+    try:
+        cached = _LEGACY_REGIONS.get(obj)
+    except TypeError:                      # unhashable / not weakref-able
+        cached = None
+    if cached is not None:
+        return cached
+    r = Region.from_legacy(obj)
+    try:
+        obj._as_region = r
+    except (AttributeError, TypeError):    # frozen objects: weak-cache
+        try:
+            _LEGACY_REGIONS[obj] = r
+        except TypeError:                  # pragma: no cover
+            pass
+    return r
+
+
+def region(name: Optional[str] = None, *, offloaded: bool = True,
+           ledger: Optional[Ledger] = None, size_fn: Optional[Callable] = None,
+           placement: Optional[Mapping[Any, MemSpace]] = None,
+           result_space: Optional[MemSpace] = None):
+    """Decorator: mark a function as one offloadable region (listings 4-6).
+
+        @region("Amul", placement={0: MemSpace.DEVICE})
+        def amul(diag, off, x): ...
+    """
+    def wrap(fn: Callable) -> Region:
+        return Region(name=name or getattr(fn, "__name__", "region"),
+                      fn=fn, offloaded=offloaded,
+                      size_fn=size_fn or default_size,
+                      arg_spaces=placement, result_space=result_space,
+                      ledger=ledger or GLOBAL_LEDGER)
+    return wrap
+
+
+# ---------------------------------------------------------------------------
+# Policy axes: routing, staging, placement
+# ---------------------------------------------------------------------------
+
+class Router(Protocol):
+    def target(self, region: Region, args, kwargs,
+               size: Optional[int] = None) -> str: ...
+
+
+@dataclasses.dataclass
+class StaticRouter:
+    """Mode-style routing: offloaded regions go one place, the rest another.
+
+    ``default`` means "run wherever the operands live" — the APU model where
+    switching sides implies no data motion."""
+    offloaded_target: str = "default"
+    fallback_target: str = "default"
+
+    def target(self, region: Region, args, kwargs,
+               size: Optional[int] = None) -> str:
+        return self.offloaded_target if region.offloaded \
+            else self.fallback_target
+
+
+@dataclasses.dataclass
+class SizeRouter:
+    """The ``if(target: n > TARGET_CUT_OFF)`` clause (paper C3), absorbed
+    from ``dispatch.TargetDispatch`` so it can run *inside* any executor."""
+    cutoff: int = DEFAULT_CUTOFF
+
+    def target(self, region: Region, args, kwargs,
+               size: Optional[int] = None) -> str:
+        if not region.offloaded:
+            return "host"
+        n = region.size_fn(args, kwargs) if size is None else size
+        return "device" if n > self.cutoff else "host"
+
+
+class Stager(Protocol):
+    stages: bool
+    def stage_in(self, region: Region, args, kwargs) -> Tuple[tuple, float, int]: ...
+    def stage_out(self, region: Region, out, staged_in=None) -> Tuple[Any, float, int]: ...
+
+
+class NullStager:
+    """APU / host model: crossing the boundary moves no bytes."""
+    stages = False
+
+    def stage_in(self, region, args, kwargs):
+        return (args, kwargs), 0.0, 0
+
+    def stage_out(self, region, out, staged_in=None):
+        return out, 0.0, 0
+
+
+# copy-into-donated-buffer: XLA may alias the output onto the pooled
+# buffer's storage, which is what "reuse" means for immutable arrays
+# (select keeps the dtype exact — src and dst match by construction).
+# Module-level so every stager shares one jit cache per shape/dtype.
+_copy_into = jax.jit(lambda src, dst: jnp.where(True, src, dst),
+                     donate_argnums=(1,))
+
+
+@dataclasses.dataclass
+class MigrationStager:
+    """Managed-memory dGPU model: every host<->device crossing is a REAL
+    out-of-place copy (paper §5, the >65% migration fraction of Fig 6).
+
+    Inbound, operands are read out of host memory and migrated into device
+    buffers recycled through the :class:`DeviceBufferPool` (donation hands
+    the pooled storage to XLA — paper C4's "reuse instead of alloc/free
+    churn").  Outbound, results are read back and landed in pooled host
+    staging pages before being re-wrapped as host-space arrays, so the next
+    host consumer sees host memory — and the next offloaded region pays the
+    migration again."""
+    arena: UnifiedArena = dataclasses.field(default_factory=UnifiedArena)
+    host_pool: HostStagingPool = dataclasses.field(
+        default_factory=HostStagingPool)
+    device_pool: DeviceBufferPool = dataclasses.field(
+        default_factory=DeviceBufferPool)
+    stages = True
+
+    def _migrate_in(self, x):
+        if not hasattr(x, "nbytes"):
+            return x
+        h = np.asarray(x)                               # host page read
+        dst = self.device_pool.acquire(h.shape, h.dtype)
+        return _copy_into(h, dst)                       # host -> device copy
+
+    @staticmethod
+    def _aliases(y, buf) -> bool:
+        """Does the jax Array share storage with the numpy staging buffer?
+        On CPU backends device_put from numpy may be zero-copy."""
+        try:
+            return y.unsafe_buffer_pointer() == \
+                buf.__array_interface__["data"][0]
+        except Exception:
+            return True                                 # conservative
+
+    def _migrate_out(self, x):
+        if not isinstance(x, jax.Array):
+            return x
+        h = np.asarray(jax.device_get(x))               # device -> host copy
+        buf = self.host_pool.acquire(h.shape, h.dtype)
+        np.copyto(buf, h)                               # pooled host pages
+        y = umem.place(buf, self.arena.host_space, self.arena.device)
+        if not isinstance(y, jax.Array):                # no host space: wrap
+            y = jax.device_put(buf, self.arena.device)
+        # recycle the page when the wrap copied; a zero-copy device_put
+        # leaves y aliasing the pooled bytes (CPU backends), so there the
+        # page returns to the pool only when the result array dies — the
+        # Umpire model: the app "frees" host memory by dropping the result
+        if self._aliases(y, buf):
+            try:
+                weakref.finalize(y, self.host_pool.release, buf)
+            except TypeError:              # pragma: no cover - no weakrefs
+                pass
+        else:
+            self.host_pool.release(buf)
+        return y
+
+    def stage_in(self, region, args, kwargs):
+        t0 = time.perf_counter()
+        nbytes = self.arena.bytes_of((args, kwargs))
+        staged = jax.tree.map(self._migrate_in, (args, kwargs))
+        jax.block_until_ready(staged)
+        return staged, time.perf_counter() - t0, nbytes
+
+    def stage_out(self, region, out, staged_in=None):
+        t0 = time.perf_counter()
+        nbytes = self.arena.bytes_of(out)
+        staged = jax.tree.map(self._migrate_out, out)
+        jax.block_until_ready(staged)
+        if staged_in is not None:                       # recycle dead inputs
+            for x in jax.tree.leaves(staged_in):
+                if isinstance(x, jax.Array):
+                    self.device_pool.release(x)
+        return staged, time.perf_counter() - t0, nbytes
+
+
+@dataclasses.dataclass
+class Placer:
+    """Placement axis: apply a region's MemSpace hints through umem.
+
+    ``min_bytes`` is the paper-C4-style threshold: leaves smaller than it
+    stay where they are (placing a scalar across spaces costs more than it
+    saves)."""
+    min_bytes: int = 0
+    honor_hints: bool = True
+
+    def place_args(self, region: Region, args, kwargs):
+        if not (self.honor_hints and region.arg_spaces):
+            return args, kwargs
+        args = list(args)
+        kwargs = dict(kwargs)
+        for key, space in region.arg_spaces.items():
+            if isinstance(key, str):
+                if key in kwargs:
+                    kwargs[key] = umem.tree_place(kwargs[key], space,
+                                                  min_bytes=self.min_bytes)
+                    continue
+                # name hint for a positionally-passed argument
+                key = region._param_index.get(key, -1)
+            if isinstance(key, int) and 0 <= key < len(args):
+                args[key] = umem.tree_place(args[key], space,
+                                            min_bytes=self.min_bytes)
+        return tuple(args), kwargs
+
+    def place_result(self, region: Region, out):
+        if self.honor_hints and region.result_space is not None:
+            return umem.tree_place(out, region.result_space,
+                                   min_bytes=self.min_bytes)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPolicy = placement x routing x staging
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ExecutionPolicy(Protocol):
+    """What an Executor needs: a name and the three composable axes."""
+    name: str
+    router: Router
+    stager: Stager
+    placer: Placer
+
+
+@dataclasses.dataclass
+class ComposedPolicy:
+    """A concrete ExecutionPolicy assembled from the three axes."""
+    name: str
+    router: Any = dataclasses.field(default_factory=StaticRouter)
+    stager: Any = dataclasses.field(default_factory=NullStager)
+    placer: Any = dataclasses.field(default_factory=Placer)
+
+
+class UnifiedPolicy(ComposedPolicy):
+    """APU model (paper §3): operands stay where they are, regions run
+    back-to-back, zero staging by construction."""
+
+    def __init__(self, placer: Optional[Placer] = None):
+        super().__init__("unified", StaticRouter("default", "default"),
+                         NullStager(), placer or Placer())
+
+
+class HostPolicy(ComposedPolicy):
+    """dCPU model: every region — directive or not — runs on the host."""
+
+    def __init__(self, placer: Optional[Placer] = None):
+        super().__init__("host", StaticRouter("host", "host"),
+                         NullStager(), placer or Placer())
+
+
+class DiscretePolicy(ComposedPolicy):
+    """Managed-memory dGPU model: offloaded regions run on the device and
+    pay real staging copies both ways (paper Fig 6)."""
+
+    def __init__(self, arena: Optional[UnifiedArena] = None,
+                 host_pool: Optional[HostStagingPool] = None,
+                 device_pool: Optional[DeviceBufferPool] = None,
+                 placer: Optional[Placer] = None):
+        arena = arena or UnifiedArena()
+        super().__init__("discrete", StaticRouter("device", "default"),
+                         MigrationStager(arena,
+                                         host_pool or HostStagingPool(),
+                                         device_pool or DeviceBufferPool()),
+                         placer or Placer())
+        self.arena = arena
+
+
+class AdaptivePolicy(ComposedPolicy):
+    """Calibrated size-based routing *inside* an executor — the
+    ``TARGET_CUT_OFF`` clause as a policy axis, which the pre-regions split
+    (TargetDispatch vs executors) made structurally impossible."""
+
+    def __init__(self, cutoff: int = DEFAULT_CUTOFF,
+                 stager: Optional[Stager] = None,
+                 placer: Optional[Placer] = None):
+        super().__init__("adaptive", SizeRouter(cutoff),
+                         stager or NullStager(), placer or Placer())
+
+    @property
+    def cutoff(self) -> int:
+        return self.router.cutoff
+
+    @cutoff.setter
+    def cutoff(self, value: int) -> None:
+        self.router.cutoff = value
+
+    def calibrate(self, target_region, make_args: Callable[[int], tuple],
+                  sizes: Sequence[int] = (256, 1024, 4096, 16384, 65536),
+                  reps: int = 20, ledger: Optional[Ledger] = None) -> int:
+        """Reproduce the paper's empirical TARGET_CUT_OFF choice: time both
+        executables over a size ladder, set cutoff to the crossover, and
+        record the choice with the region's ledger row.
+
+        ``ledger`` additionally mirrors the cutoff into another ledger's
+        row of the same bare name (get-or-create) — note that a foreign
+        ledger holding a *different* region under that name would receive
+        the mirror on that row."""
+        r = as_region(target_region)
+        crossover = None
+        for n in sorted(sizes):
+            args = make_args(n)
+            ts = {}
+            for tgt in ("host", "device"):
+                ex = r.executable(tgt)
+                out = ex(*args)
+                jax.block_until_ready(out)
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    out = ex(*args)
+                jax.block_until_ready(out)
+                ts[tgt] = (time.perf_counter() - t0) / reps
+            if ts["device"] < ts["host"]:
+                crossover = n
+                break
+        if crossover is None:
+            crossover = max(sizes) + 1
+        self.cutoff = crossover
+        # the region's OWN ledger is authoritative for r.name; an explicit
+        # foreign ledger gets a bare-name mirror (see docstring caveat)
+        r.ledger.set_cutoff(r.name, crossover)
+        if ledger is not None and ledger is not r.ledger:
+            ledger.set_cutoff(r.name, crossover)
+        return crossover
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+class Executor:
+    """Replays region programs under one ExecutionPolicy, accounting every
+    call into one Ledger.
+
+    Return contract: ``run`` ALWAYS returns jax Arrays (or the region's
+    non-array outputs unchanged), regardless of policy.  The discrete policy
+    stages results into host-space arrays — it does not leak numpy, which
+    the old DiscreteExecutor did, silently changing downstream types per
+    mode."""
+
+    def __init__(self, policy: ExecutionPolicy, ledger: Optional[Ledger] = None):
+        self.policy = policy
+        self.ledger = ledger or Ledger(policy.name)
+        self.mode = policy.name
+        # region -> (ledger -> row name), weak at both levels: entries die
+        # with their region/ledger instead of pinning compiled executables
+        # for the executor's lifetime, and object identity (not id()) rules
+        # out stale hits after a ledger swap recycles an address
+        self._row_names = weakref.WeakKeyDictionary()
+
+    def _row_name(self, r: Region) -> str:
+        """Ledger row for this region in THIS executor's ledger.  Distinct
+        region objects that happen to share a name (registered in different
+        ledgers) must not merge into one row — re-uniquify on first record."""
+        per_region = self._row_names.get(r)
+        if per_region is None:
+            per_region = weakref.WeakKeyDictionary()
+            self._row_names[r] = per_region
+        name = per_region.get(self.ledger)
+        if name is None:
+            name = r.name if r.ledger is self.ledger \
+                else self.ledger.register(r.name, r.offloaded)
+            per_region[self.ledger] = name
+        return name
+
+    def run(self, target_region, *args, **kwargs):
+        r = as_region(target_region)
+        pol = self.policy
+        n = r.size_fn(args, kwargs)
+        tgt = pol.router.target(r, args, kwargs, size=n)
+        args, kwargs = pol.placer.place_args(r, args, kwargs)
+        staging_s = 0.0
+        staging_b = 0
+        stage = pol.stager.stages and r.offloaded and tgt != "host"
+        staged_in = None
+        if stage:
+            (args, kwargs), s, b = pol.stager.stage_in(r, args, kwargs)
+            staged_in = (args, kwargs)
+            staging_s += s
+            staging_b += b
+        t0 = time.perf_counter()
+        out = r.executable(tgt)(*args, **kwargs)
+        jax.block_until_ready(out)
+        compute_s = time.perf_counter() - t0
+        if stage:
+            out, s, b = pol.stager.stage_out(r, out, staged_in)
+            staging_s += s
+            staging_b += b
+        out = pol.placer.place_result(r, out)
+        device = r.offloaded if tgt == "default" else (tgt == "device")
+        self.ledger.record(self._row_name(r), device=device,
+                           offloaded=r.offloaded,
+                           compute_s=compute_s, staging_s=staging_s,
+                           staging_bytes=staging_b, elems=n)
+        return out
+
+    def report(self) -> dict:
+        rep = self.ledger.coverage_report()
+        rep["mode"] = self.mode
+        return rep
+
+
+POLICIES = {
+    "unified": UnifiedPolicy,
+    "discrete": DiscretePolicy,
+    "host": HostPolicy,
+    "adaptive": AdaptivePolicy,
+}
+
+
+def make_policy(mode: str, **kw) -> ComposedPolicy:
+    return POLICIES[mode](**kw)

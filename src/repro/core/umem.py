@@ -28,16 +28,32 @@ class MemSpace(enum.Enum):
         return self.value
 
 
+_SPACES_CACHE: dict = {}
+
+
 def supported_spaces(device=None) -> set:
     d = device or jax.devices()[0]
-    try:
-        return {m.kind for m in d.addressable_memories()}
-    except Exception:                       # pragma: no cover
-        return {"device"}
+    if d not in _SPACES_CACHE:
+        try:
+            _SPACES_CACHE[d] = {m.kind for m in d.addressable_memories()}
+        except Exception:                   # pragma: no cover
+            _SPACES_CACHE[d] = {"device"}
+    return _SPACES_CACHE[d]
+
+
+def preferred_host_space(device=None) -> Optional[MemSpace]:
+    """Best available host-DRAM space: pinned if the platform has it,
+    unpinned otherwise, None when the device exposes no host space at all."""
+    sup = supported_spaces(device)
+    for space in (MemSpace.HOST, MemSpace.HOST_UNPINNED):
+        if space.kind in sup:
+            return space
+    return None
 
 
 def place(x, space: MemSpace, device=None):
-    """Move one array to a memory space (no-op if already there)."""
+    """Move one array to a memory space (no-op if already there or if the
+    platform does not expose that space)."""
     d = device or jax.devices()[0]
     if space.kind not in supported_spaces(d):
         return x
@@ -45,8 +61,28 @@ def place(x, space: MemSpace, device=None):
     return jax.device_put(x, sh)
 
 
-def tree_place(tree, space: MemSpace, device=None):
-    return jax.tree.map(lambda x: place(x, space, device), tree)
+def tree_place(tree, space: MemSpace, device=None, min_bytes: int = 0):
+    """Place every array leaf of a pytree into a memory space.
+
+    ``min_bytes`` is a placement threshold (paper C4's "pool only buffers
+    above 5K elements", applied to placement): leaves smaller than it stay
+    where they are — moving a scalar across spaces costs more than it saves.
+    """
+    def maybe(x):
+        # leaves without .nbytes (Python scalars) count as size 0: with a
+        # threshold set they stay put rather than becoming committed Arrays
+        if min_bytes and getattr(x, "nbytes", 0) < min_bytes:
+            return x
+        return place(x, space, device)
+    return jax.tree.map(maybe, tree)
+
+
+def place_like(tree, shardings):
+    """device_put each leaf onto its matching sharding — the placement
+    companion to :func:`tree_place` for sharded programs.  ``shardings``
+    must mirror ``tree`` leaf-for-leaf (NamedShardings /
+    SingleDeviceShardings carrying memory kinds)."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
 
 
 def space_of(x) -> Optional[str]:
@@ -75,7 +111,9 @@ class UnifiedArena:
         self.device = self.device or jax.devices()[0]
         sup = supported_spaces(self.device)
         if self.host_space.kind not in sup:
-            self.host_space = self.device_space   # degrade gracefully
+            # degrade gracefully: pinned -> unpinned host -> device space
+            self.host_space = preferred_host_space(self.device) \
+                or self.device_space
 
     def to_device(self, tree):
         return tree_place(tree, self.device_space, self.device)

@@ -21,11 +21,29 @@ import numpy as np
 from repro.configs.reduced import reduced as make_reduced
 from repro.configs.registry import get_config
 from repro.core.pool import DeviceBufferPool
-from repro.core.umem import MemSpace, supported_spaces
+from repro.core.umem import preferred_host_space, tree_place
 from repro.launch import sharding as SH
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import transformer as T
 from repro.train import step as S
+
+
+# placement is keyed on tensor ROLE, not just size: only the actual k/v
+# pages (batch*heads*len*head_dim — megabytes at serving scale) go to host
+# DRAM; slot/position bookkeeping is decode-hot and stays deviceside no
+# matter how large. min_bytes additionally keeps smoke-scale k/v pages,
+# where the crossing costs more than it saves, where they are.
+KV_PLACE_KEYS = ("k", "v")
+KV_PLACE_MIN_BYTES = 32768
+
+
+def offload_kv_cache(cache, space, min_bytes=KV_PLACE_MIN_BYTES):
+    def per_leaf(path, x):
+        keys = {getattr(p, "key", None) for p in path}
+        if keys & set(KV_PLACE_KEYS):
+            return tree_place(x, space, min_bytes=min_bytes)
+        return x
+    return jax.tree_util.tree_map_with_path(per_leaf, cache)
 
 
 def build_server(cfg, mesh, batch: int, max_len: int, q_chunk=256,
@@ -39,16 +57,14 @@ def build_server(cfg, mesh, batch: int, max_len: int, q_chunk=256,
         cfg, lambda: T.Ctx(mode="decode", shd=shd, remat=False)),
         donate_argnums=(2,))
 
-    kv_kind = MemSpace.HOST.kind if (
-        offload_kv and "pinned_host" in supported_spaces()) else None
+    # KV placement is a MemSpace hint, not a hand-rolled sharding: pages big
+    # enough to matter go to host DRAM, small tensors stay put (paper C1/C4)
+    kv_space = preferred_host_space() if offload_kv else None
 
     def make_cache():
         cache = T.init_cache(cfg, batch, max_len)
-        if kv_kind:
-            d = jax.devices()[0]
-            sh = jax.sharding.SingleDeviceSharding(d, memory_kind=kv_kind)
-            cache = jax.tree.map(
-                lambda x: jax.device_put(x, sh) if x.size > 4096 else x, cache)
+        if kv_space is not None:
+            cache = offload_kv_cache(cache, kv_space)
         return cache
 
     return prefill, decode, make_cache
@@ -106,7 +122,8 @@ def main(argv=None):
           f"prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f} ms; "
           f"decode {total_new} tokens in {t_decode*1e3:.1f} ms "
           f"({total_new/max(t_decode,1e-9):.0f} tok/s)"
-          f"{' [KV in pinned_host]' if args.offload_kv else ''}")
+          + (f" [KV in {preferred_host_space().kind}]"
+             if args.offload_kv and preferred_host_space() else ""))
     seq = np.asarray(jnp.stack(toks, axis=1))
     assert np.isfinite(seq).all()
     return seq

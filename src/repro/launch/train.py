@@ -26,7 +26,7 @@ from repro.checkpoint.ckpt import Checkpointer
 from repro.configs.base import ModelConfig
 from repro.configs.reduced import reduced as make_reduced
 from repro.configs.registry import get_config
-from repro.core.umem import MemSpace, supported_spaces
+from repro.core.umem import place_like, preferred_host_space
 from repro.data.pipeline import ShardInfo, make_source
 from repro.launch import sharding as SH
 from repro.launch.mesh import make_smoke_mesh
@@ -46,8 +46,9 @@ def build_trainer(cfg: ModelConfig, mesh, *, lr=3e-4, offload_optimizer=False,
     specs = T.param_specs(cfg)
     psh = SH.tree_param_shardings(specs, mesh, rules)
     mom_kind = None
-    if offload_optimizer and "pinned_host" in supported_spaces():
-        mom_kind = MemSpace.HOST.kind
+    if offload_optimizer:
+        host_space = preferred_host_space()
+        mom_kind = host_space.kind if host_space is not None else None
     msh_m = SH.tree_param_shardings(specs, mesh, rules, memory_kind=mom_kind)
     repl = SH.replicated(mesh)
     osh = {"m": msh_m, "v": msh_m, "step": repl}
@@ -71,11 +72,8 @@ def build_trainer(cfg: ModelConfig, mesh, *, lr=3e-4, offload_optimizer=False,
         params = jax.jit(lambda k: T.init(k, cfg), out_shardings=psh)(key)
         opt = adamw.init_state(params, opt_cfg)
         if mom_kind:
-            from repro.core.umem import tree_place
-            opt = {"m": jax.tree.map(lambda x, s: jax.device_put(x, s),
-                                     opt["m"], osh["m"]),
-                   "v": jax.tree.map(lambda x, s: jax.device_put(x, s),
-                                     opt["v"], osh["v"]),
+            opt = {"m": place_like(opt["m"], osh["m"]),
+                   "v": place_like(opt["v"], osh["v"]),
                    "step": opt["step"]}
         return (params, opt)
 

@@ -1,4 +1,6 @@
 import dataclasses
+import sys
+import types
 
 import jax
 import numpy as np
@@ -6,6 +8,57 @@ import pytest
 
 # Smoke tests and benches must see ONE device (the dry-run subprocesses set
 # their own XLA_FLAGS) — assert that contract instead of setting flags here.
+
+# ---------------------------------------------------------------------------
+# hypothesis skip-guard: when hypothesis is not installed, property tests
+# must degrade to SKIP, not break collection of their whole module.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    def _given_stub(*_a, **_k):
+        def deco(fn):
+            import inspect
+
+            def skipper(*args, **kwargs):
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            # expose only `self` so pytest doesn't mistake strategy
+            # parameters for fixtures
+            params = [p for p in inspect.signature(fn).parameters.values()
+                      if p.name == "self"]
+            skipper.__signature__ = inspect.Signature(params)
+            return skipper
+        return deco
+
+    def _settings_stub(*_a, **_k):
+        if _a and callable(_a[0]) and not _k:      # bare @settings use
+            return _a[0]
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Accepts any chained strategy construction (st.lists(...).map(...))."""
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _strategy = _StrategyStub()
+    # any attribute resolves to the inert strategy stub, so future
+    # `from hypothesis import <anything>` degrades to skip too
+    _st.__getattr__ = lambda name: _strategy
+    _hyp.given = _given_stub
+    _hyp.settings = _settings_stub
+    _hyp.strategies = _st
+    _hyp.assume = lambda *a, **k: True
+    _hyp.__getattr__ = lambda name: _strategy
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

@@ -1,5 +1,6 @@
 """CFD validation: operators vs dense algebra, two-color DILU vs sequential
 DILU (iteration parity), SIMPLE convergence, executor equivalence."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,8 +12,9 @@ from repro.cfd.precond import (dilu_seq_ref, jacobi_apply, rb_dilu_apply,
                                rb_dilu_factor)
 from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
 from repro.cfd.solvers import make_solver_regions, pbicgstab_regions, solve
-from repro.core.executors import DiscreteExecutor, HostExecutor, UnifiedExecutor
 from repro.core.ledger import Ledger
+from repro.core.regions import (DiscretePolicy, Executor, HostPolicy,
+                                UnifiedPolicy)
 
 
 def test_amul_matches_dense(rng):
@@ -94,7 +96,7 @@ def test_pbicgstab_regions_matches_fused(rng):
     P = rb_dilu_factor(A, red)
     ldg = Ledger("t")
     regions = make_solver_regions(ldg)
-    ex = UnifiedExecutor(ldg)
+    ex = Executor(UnifiedPolicy(), ldg)
     r1 = pbicgstab_regions(ex, regions, A, b, jnp.zeros_like(b), P, tol=1e-6)
     r2 = solve(A, b, jnp.zeros_like(b), red, tol=1e-6)
     assert r1.converged and r2.converged
@@ -110,11 +112,11 @@ def test_executors_same_result(rng):
     red, _ = g.red_black_masks()
     P = rb_dilu_factor(A, red)
     outs = []
-    for ex_cls in (UnifiedExecutor, DiscreteExecutor, HostExecutor):
+    for make in (UnifiedPolicy, DiscretePolicy, HostPolicy):
         ldg = Ledger("t")
         regions = make_solver_regions(ldg)
-        r = pbicgstab_regions(ex_cls(ldg), regions, A, b, jnp.zeros_like(b),
-                              P, tol=1e-6)
+        r = pbicgstab_regions(Executor(make(), ldg), regions, A, b,
+                              jnp.zeros_like(b), P, tol=1e-6)
         outs.append(np.asarray(r.x))
     np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-6)
@@ -128,11 +130,14 @@ def test_discrete_executor_pays_staging(rng):
     P = rb_dilu_factor(A, red)
     ldg = Ledger("t")
     regions = make_solver_regions(ldg)
-    ex = DiscreteExecutor(ldg)
-    pbicgstab_regions(ex, regions, A, b, jnp.zeros_like(b), P, tol=1e-6)
+    ex = Executor(DiscretePolicy(), ldg)
+    r = pbicgstab_regions(ex, regions, A, b, jnp.zeros_like(b), P, tol=1e-6)
     rep = ex.report()
     assert rep["staging_fraction"] > 0.05
     assert rep["staging_s"] > 0
+    # uniform return contract: staged results are host-space jax Arrays,
+    # not numpy (the old DiscreteExecutor changed types per mode)
+    assert isinstance(r.x, jax.Array)
 
 
 def test_simple_foam_converges():
