@@ -1,6 +1,6 @@
 """DIA (diagonal-offset) sparse matrix over a structured grid.
 
-This is the TPU adaptation of OpenFOAM's lduMatrix (DESIGN.md §2): the
+This is the TPU adaptation of OpenFOAM's lduMatrix (docs/DESIGN.md §2): the
 face-list gather/scatter Amul becomes 7 shifted-vector FMAs. Coefficients
 are stored per cell: ``diag [nx,ny,nz]`` and ``off [6, nx,ny,nz]`` where
 ``off[f]`` multiplies the neighbor in ``grid.NEIGHBORS[f]``; entries for

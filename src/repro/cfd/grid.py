@@ -6,7 +6,7 @@ OpenFOAM's HPC_motorbike mesh is unstructured; the paper's systems claims
 mesh topology — what costs is cells x iterations x solver structure. We use
 a structured grid so the LDU operator re-lays into DIA form (7 shifted
 diagonals), which is the TPU-native formulation (no gathers; pure VPU
-shifted FMAs). See DESIGN.md §2.
+shifted FMAs). See docs/DESIGN.md §2.
 """
 from __future__ import annotations
 

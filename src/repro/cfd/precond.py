@@ -5,7 +5,7 @@ backward substitution — fine on CPU, level-scheduled on GPU, hostile to the
 TPU VPU. Under a red-black ordering of the 7-point stencil the triangular
 solves decompose into two fully-parallel half-sweeps, each a shifted-stencil
 FMA — this IS a DILU factorization, just for the two-color ordering (see
-DESIGN.md §2). With red cells ordered before black:
+docs/DESIGN.md §2). With red cells ordered before black:
 
     D*_red   = diag(A)_red
     D*_black = diag(A)_black - sum_f  A_bf * A_fb / D*_red(neighbor)

@@ -1,7 +1,7 @@
 """simpleFoam — the SIMPLE pressure-velocity corrector (paper listing 3).
 
 Steady, incompressible, laminar lid-driven cavity (the geometry stand-in
-for HPC_motorbike — see DESIGN.md). One time-step executes the stages of
+for HPC_motorbike — see docs/DESIGN.md §3). One time-step executes the stages of
 listing 3, each built from region-decorated pieces so all three executors
 can replay it:
 
@@ -125,6 +125,11 @@ class SimpleFoam:
         def grad_p(p):
             return tuple(fvc.grad(cfg.grid, p))
 
+        @region("rAU=1/A", **asm)
+        def recip_diag(diag):
+            # region (not host glue) so program capture sees the dependency
+            return 1.0 / diag
+
         @region("p relax", **asm)
         def relax_p(p, dp):
             # dp is the pressure CORRECTION from the Poisson solve
@@ -133,13 +138,16 @@ class SimpleFoam:
         self.assemble_momentum = assemble_momentum
         self.assemble_pressure = assemble_pressure
         self.factor = factor
+        self.recip_diag = recip_diag
         self.correct_u = correct_u
         self.grad_p = grad_p
         self.relax_p = relax_p
 
     # ------------------------------------------------------------------
-    def time_step(self, st: SimpleState) -> tuple:
-        cfg, ex = self.cfg, self.ex
+    def time_step(self, st: SimpleState, executor=None) -> tuple:
+        """One SIMPLE iteration.  ``executor`` overrides ``self.ex`` for this
+        call only — program capture passes a recording executor here."""
+        cfg, ex = self.cfg, executor if executor is not None else self.ex
         run = ex.run
         # --- momentum predictor -------------------------------------
         du, off, ru, dv, rv, dw, rw = run(self.assemble_momentum,
@@ -157,7 +165,7 @@ class SimpleFoam:
                                   rw, st.w, Pm, tol=cfg.tol_u,
                                   max_iter=cfg.inner_max)
         u_s, v_s, w_s = res_u.x, res_v.x, res_w.x
-        rAU = 1.0 / du
+        rAU = run(self.recip_diag, du)
         # --- pressure corrector (solves for the correction p') -------
         p = st.p
         for _ in range(self.cfg.n_correctors):
@@ -189,3 +197,35 @@ class SimpleFoam:
             st, m = self.time_step(st)
         fom = (time.perf_counter() - t0) / n
         return st, fom, m
+
+    # -- captured-program path (repro.core.program) --------------------
+    def capture_step(self, st: SimpleState):
+        """Record one SIMPLE time-step as a :class:`RegionProgram`.
+
+        The step executes eagerly during capture (inner solver loops run to
+        their real convergence on ``st``), and the resulting trace — with
+        iteration counts and host-extracted residual scalars frozen,
+        CUDA-graph style — can be replayed under any policy, overlapped by
+        ``AsyncExecutor``, or vmapped over N cavities by ``replay_batch``.
+        """
+        from repro.core.program import capture
+
+        class _Rec:                   # quacks like an Executor for time_step
+            def __init__(self, run):
+                self.run = run
+
+        def step_fn(run, u, v, w, p):
+            new, _ = self.time_step(SimpleState(u, v, w, p, st.step),
+                                    executor=_Rec(run))
+            return (new.u, new.v, new.w, new.p)
+
+        return capture(step_fn, st.u, st.v, st.w, st.p, name="simple_step")
+
+    def replay_steps(self, prog, st: SimpleState, n: int, executor) -> tuple:
+        """Replay a captured step ``n`` times, chaining the state through.
+        Returns (state, fom_seconds_per_step)."""
+        t0 = time.perf_counter()
+        for _ in range(n):
+            u, v, w, p = prog.replay(executor, st.u, st.v, st.w, st.p)
+            st = SimpleState(u, v, w, p, st.step + 1)
+        return st, (time.perf_counter() - t0) / n

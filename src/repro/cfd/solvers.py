@@ -89,7 +89,11 @@ def pbicgstab_regions(executor, regions, A: DiaMatrix, b, x0, P: RBDilu,
     """OpenFOAM PBiCGStab, one executor.run per offloaded region."""
     run = executor.run
     x = x0
-    r = b - run(regions.amul, A.diag, A.off, x)
+    # r = b - 1.0*Ax through the saxpy region (identical math) so the whole
+    # residual dataflow is region-visible — program capture
+    # (repro.core.program) records real dependencies instead of freezing a
+    # host-computed array as a constant
+    r = run(regions.saxpy, 1.0, run(regions.amul, A.diag, A.off, x), b)
     rA0 = r
     norm = float(run(regions.summag, b)) + SMALL
     res0 = float(run(regions.summag, r)) / norm

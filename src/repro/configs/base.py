@@ -186,5 +186,5 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
     if shape.name == "long_500k":
         ok = any(k in RECURRENT_KINDS or k == "attn_local" for k in cfg.layer_kinds)
         if not ok:
-            return False, "long_500k skipped: pure full-attention arch (see DESIGN.md)"
+            return False, "long_500k skipped: pure full-attention arch (see docs/DESIGN.md §7)"
     return True, ""

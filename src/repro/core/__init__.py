@@ -8,14 +8,18 @@ C4 memory pooling  -> repro.core.pool       (HostStagingPool, DeviceBufferPool)
 
 ``repro.core.regions`` is the canonical API: Region + ExecutionPolicy
 (placement x routing x staging) run by one Executor.  ``executors`` and
-``dispatch`` re-export deprecated shims over it.
+``dispatch`` re-export deprecated shims over it.  ``repro.core.program``
+layers captured region programs on top: record one step, replay it under
+any policy with lookahead staging overlap (AsyncExecutor) or vmapped over
+N independent instances (RegionProgram.replay_batch).
 """
 from repro.core.dispatch import DispatchStats, TargetDispatch, offload
 from repro.core.executors import (DiscreteExecutor, HostExecutor,
                                   UnifiedExecutor, make_executor)
 from repro.core.ledger import GLOBAL_LEDGER, Ledger, RegionRecord, offload_region
-from repro.core.pool import (DeviceBufferPool, HostStagingPool,
-                             POOL_MIN_ELEMS, PoolStats)
+from repro.core.pool import (BufferRotation, DeviceBufferPool,
+                             HostStagingPool, POOL_MIN_ELEMS, PoolStats)
+from repro.core.program import AsyncExecutor, RegionProgram, capture
 from repro.core.regions import (DEFAULT_CUTOFF, AdaptivePolicy, ComposedPolicy,
                                 DiscretePolicy, ExecutionPolicy, Executor,
                                 HostPolicy, MigrationStager, NullStager,

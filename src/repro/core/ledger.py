@@ -27,6 +27,8 @@ class RegionRecord:
     host_compute_s: float = 0.0         # region may mix under AdaptivePolicy
     staging_s: float = 0.0              # discrete-emulation copy time
     staging_bytes: int = 0
+    overlap_s: float = 0.0              # staging hidden behind earlier compute
+    #                                     (async lookahead replay; <= staging_s)
     host_elems: int = 0                 # routing accounting (was DispatchStats)
     device_elems: int = 0
     cutoff: Optional[int] = None        # calibrated TARGET_CUT_OFF, if any
@@ -39,6 +41,12 @@ class RegionRecord:
     def offload_fraction(self) -> float:
         tot = self.host_elems + self.device_elems
         return self.device_elems / tot if tot else 0.0
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of this region's staging time that ran concurrently with
+        another region's compute (Fig 6 mitigation: prefetch overlap)."""
+        return self.overlap_s / self.staging_s if self.staging_s else 0.0
 
 
 class Ledger:
@@ -68,7 +76,8 @@ class Ledger:
 
     def record(self, name: str, *, device: bool, compute_s: float,
                staging_s: float = 0.0, staging_bytes: int = 0,
-               offloaded: bool = True, elems: int = 0) -> None:
+               offloaded: bool = True, elems: int = 0,
+               overlap_s: float = 0.0) -> None:
         r = self.region(name, offloaded)
         r.calls += 1
         r.device_calls += int(device)
@@ -76,6 +85,7 @@ class Ledger:
         r.compute_s += compute_s
         r.staging_s += staging_s
         r.staging_bytes += staging_bytes
+        r.overlap_s += min(overlap_s, staging_s)
         if device:
             r.device_compute_s += compute_s
             r.device_elems += elems
@@ -90,7 +100,7 @@ class Ledger:
     def reset_timings(self) -> None:
         for r in self.regions.values():
             r.calls = r.device_calls = r.host_calls = 0
-            r.compute_s = r.staging_s = 0.0
+            r.compute_s = r.staging_s = r.overlap_s = 0.0
             r.device_compute_s = r.host_compute_s = 0.0
             r.staging_bytes = 0
             r.host_elems = r.device_elems = 0
@@ -110,6 +120,7 @@ class Ledger:
         dev = sum(r.device_compute_s for r in self.regions.values()
                   if r.offloaded)
         staging = sum(r.staging_s for r in self.regions.values())
+        overlap = sum(r.overlap_s for r in self.regions.values())
         host_calls = sum(r.host_calls for r in self.regions.values())
         device_calls = sum(r.device_calls for r in self.regions.values())
         host_elems = sum(r.host_elems for r in self.regions.values())
@@ -124,6 +135,12 @@ class Ledger:
             "staging_s": staging,
             "device_fraction": dev / total if total else 0.0,
             "staging_fraction": staging / total if total else 0.0,  # Fig 6
+            # async lookahead replay (repro.core.program): how much of the
+            # staging storm was hidden behind compute, and the seconds saved
+            # vs a fully synchronous replay of the same program
+            "overlap_s": overlap,
+            "overlap_fraction": overlap / staging if staging else 0.0,
+            "staging_saved_s": overlap,
             # routing accounting (absorbed from dispatch.DispatchStats):
             # every host/device decision — static or TARGET_CUT_OFF-adaptive —
             # lands here, next to the staging fractions it trades against.

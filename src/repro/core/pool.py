@@ -130,6 +130,9 @@ class DeviceBufferPool:
         self._jax = jax
         self.min_elems = min_elems
         self._free: Dict[tuple, list] = {}
+        # async lookahead staging acquires from a prefetch thread while the
+        # main thread releases — free-list mutation must be atomic
+        self._lock = threading.Lock()
         self.stats = PoolStats()
         try:
             self._default_kind = jax.devices()[0].default_memory().kind
@@ -149,16 +152,18 @@ class DeviceBufferPool:
         import jax.numpy as jnp
         elems = int(np.prod(shape)) if shape else 1
         if elems < self.min_elems:
-            self.stats.unpooled += 1
+            with self._lock:
+                self.stats.unpooled += 1
             return jnp.zeros(shape, dtype)
         key = self._key(shape, dtype, memory_kind)
-        bucket = self._free.get(key)
-        if bucket:
-            self.stats.hits += 1
-            self.stats.bytes_reused += elems * np.dtype(dtype).itemsize
-            return bucket.pop()
-        self.stats.misses += 1
-        self.stats.bytes_allocated += elems * np.dtype(dtype).itemsize
+        with self._lock:
+            bucket = self._free.get(key)
+            if bucket:
+                self.stats.hits += 1
+                self.stats.bytes_reused += elems * np.dtype(dtype).itemsize
+                return bucket.pop()
+            self.stats.misses += 1
+            self.stats.bytes_allocated += elems * np.dtype(dtype).itemsize
         buf = jnp.zeros(shape, dtype)
         if memory_kind and memory_kind != "device":
             d = self._jax.devices()[0]
@@ -174,7 +179,80 @@ class DeviceBufferPool:
             return
         if int(np.prod(buf.shape) if buf.shape else 1) < self.min_elems:
             return
-        self._free.setdefault(key, []).append(buf)
+        with self._lock:
+            self._free.setdefault(key, []).append(buf)
+
+
+class BufferRotation:
+    """Double-buffered (depth-N) rotation over a :class:`DeviceBufferPool`.
+
+    Async lookahead staging (``repro.core.program.AsyncExecutor``) migrates
+    region *k+1*'s operands while region *k* still computes out of ITS staged
+    buffers — the two operand sets must come from disjoint pooled buffers.
+    A rotation gives each in-flight region its own *bank*: ``acquire`` lands
+    in the active bank, ``advance`` opens a fresh bank for the next region,
+    and ``retire`` returns the oldest bank's buffers to the backing pool once
+    its region has finished computing.  With ``depth=2`` this is classic
+    double buffering; deeper rotations support deeper lookahead.
+    """
+
+    def __init__(self, pool: Optional[DeviceBufferPool] = None,
+                 depth: int = 2):
+        if depth < 2:
+            raise ValueError("rotation needs >= 2 banks to double-buffer")
+        self.pool = pool or DeviceBufferPool()
+        self.depth = depth
+        self._banks: List[list] = [[]]
+        self._lock = threading.Lock()
+        self.rotations = 0
+
+    def register(self, buf) -> None:
+        """Track an already-acquired buffer in the active bank.  Stagers that
+        route pooled storage through a donating copy must register the copy's
+        RESULT (which owns the recycled storage), not the consumed buffer."""
+        with self._lock:
+            self._banks[-1].append(buf)
+
+    def acquire(self, shape, dtype, memory_kind: Optional[str] = None):
+        buf = self.pool.acquire(shape, dtype, memory_kind)
+        self.register(buf)
+        return buf
+
+    def advance(self) -> None:
+        """Open a new active bank (call when staging for the NEXT region
+        begins). If the rotation is full, the oldest bank is retired first."""
+        with self._lock:
+            while len(self._banks) >= self.depth:
+                self._retire_locked()
+            self._banks.append([])
+            self.rotations += 1
+
+    def retire(self) -> None:
+        """Release the oldest bank's buffers back to the pool (call once the
+        region computing out of that bank has completed)."""
+        with self._lock:
+            self._retire_locked()
+
+    def _retire_locked(self) -> None:
+        if len(self._banks) > 1 or (self._banks and self._banks[0]):
+            for buf in self._banks.pop(0):
+                self.pool.release(buf)
+            if not self._banks:
+                self._banks.append([])
+
+    def drain(self) -> None:
+        """Retire every bank (end of a replay)."""
+        with self._lock:
+            while self._banks and (len(self._banks) > 1 or self._banks[0]):
+                for buf in self._banks.pop(0):
+                    self.pool.release(buf)
+            if not self._banks:
+                self._banks.append([])
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return sum(len(b) for b in self._banks)
 
 
 GLOBAL_STAGING_POOL = HostStagingPool()

@@ -1,0 +1,485 @@
+"""Captured region programs: record one step, replay it many ways.
+
+The paper's Fig 6 shows the managed-dGPU model paying a *staging storm*
+between consecutive regions — every host<->device crossing is a real page
+migration.  ``repro.core.regions`` reproduces that storm faithfully but
+synchronously: each region stages in, computes, stages out, then the next
+region starts.  Real discrete-GPU codes hide part of the storm by
+overlapping migration with compute (prefetch/double-buffering) — the
+mitigation both MI300A and Grace-Hopper unified-memory studies measure
+against.  Expressing it needs one thing the per-call ``Executor`` cannot
+have: *knowledge of what runs next*.
+
+This module adds that knowledge as a captured program:
+
+* :func:`capture` — run a step function once under a recording ``run``
+  callable and record every region call plus the dataflow between calls
+  (which output leaf feeds which later argument leaf).  Capture executes
+  regions eagerly, so host-side control flow (solver convergence loops)
+  proceeds normally — and, CUDA-graph style, is *frozen* into the trace:
+  iteration counts and host-extracted scalars become program constants.
+
+* :class:`RegionProgram` — the trace: ops, input slots, constants, output
+  spec.  ``replay(executor, *inputs)`` re-issues the calls through any
+  ``Executor`` (synchronous, any policy); ``replay_batch`` vmaps the whole
+  program over stacked inputs — N independent cavity solves or decode
+  requests through one compiled composite (the "heavy traffic" path).
+
+* :class:`AsyncExecutor` — replays a program under any
+  ``ExecutionPolicy`` with ONE-STEP LOOKAHEAD: while region *k* computes,
+  a staging thread migrates region *k+1*'s already-available operands
+  through a second pooled buffer bank
+  (:class:`~repro.core.pool.BufferRotation`).  Staging seconds that run
+  concurrently with compute are accounted as ``overlap_s`` on the region's
+  ledger row and surface as ``overlap_fraction`` / ``staging_saved_s`` in
+  ``Ledger.coverage_report()``.  Results are numerically identical to the
+  synchronous ``Executor`` on the same program: the same executables run on
+  the same staged copies — only the *schedule* of the copies changes.
+
+Capture semantics (what is and is not recorded):
+
+- array leaves returned by a region and passed to a later region become
+  dataflow edges; replay recomputes them,
+- array leaves of the example inputs become program input slots; replay
+  substitutes fresh values positionally,
+- everything else — Python scalars, ``float()``-extracted reductions,
+  arrays computed *outside* any region — is captured as a constant.  Keep
+  cross-region math inside regions if replays must react to new inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import weakref
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import umem
+from repro.core.ledger import Ledger
+from repro.core.pool import BufferRotation
+from repro.core.regions import Executor, ExecutionPolicy, Region, as_region
+
+
+def _is_array(x) -> bool:
+    return isinstance(x, (jax.Array, np.ndarray))
+
+
+# ---------------------------------------------------------------------------
+# Leaf descriptors: where does each argument leaf of a call come from?
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Ref:
+    """Output leaf ``leaf`` of a previous op ``op``."""
+    op: int
+    leaf: int
+
+
+@dataclasses.dataclass(frozen=True)
+class In:
+    """Leaf ``slot`` of the program's flattened inputs."""
+    slot: int
+
+
+class Lit:
+    """A captured constant (host scalar, frozen control-flow value, or an
+    array computed outside any region)."""
+    __slots__ = ("value",)
+
+    def __init__(self, value):
+        self.value = value
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"Lit({type(self.value).__name__})"
+
+
+@dataclasses.dataclass
+class OpCall:
+    """One recorded region call."""
+    region: Region
+    in_tree: Any                 # treedef of (args, kwargs)
+    leaves: List[Any]            # Ref | In | Lit per argument leaf
+    arg_keys: List[Any]          # per-leaf top-level arg index / kwarg name
+    example_size: int            # size_fn at capture (routing prediction)
+    n_out: int = 0
+    out_tree: Any = None
+
+
+def _resolver(env: List[List[Any]], in_leaves: List[Any]) -> Callable:
+    """The one Ref/In/Lit resolution rule, shared by every replay path."""
+    def resolve(d):
+        if isinstance(d, Ref):
+            return env[d.op][d.leaf]
+        if isinstance(d, In):
+            return in_leaves[d.slot]
+        return d.value
+    return resolve
+
+
+def _flatten_call(args, kwargs) -> Tuple[List[Any], List[Any], Any]:
+    """Flatten (args, kwargs) keeping, per leaf, the top-level positional
+    index or keyword name it belongs to (placement hints are keyed on it).
+    Leaf order matches ``jax.tree.flatten((args, kwargs))`` — tuples in
+    order, dict keys sorted."""
+    leaves, keys = [], []
+    for idx, a in enumerate(args):
+        ls = jax.tree.leaves(a)
+        leaves += ls
+        keys += [idx] * len(ls)
+    for kname in sorted(kwargs):
+        ls = jax.tree.leaves(kwargs[kname])
+        leaves += ls
+        keys += [kname] * len(ls)
+    return leaves, keys, jax.tree.structure((args, kwargs))
+
+
+# ---------------------------------------------------------------------------
+# RegionProgram
+# ---------------------------------------------------------------------------
+
+class RegionProgram:
+    """A recorded trace of region calls with explicit dataflow."""
+
+    def __init__(self, name: str = "program"):
+        self.name = name
+        self.ops: List[OpCall] = []
+        self.in_tree = None
+        self.n_inputs = 0
+        self.out_tree = None
+        self.out_leaves: List[Any] = []
+        self._example_in_leaves: List[Any] = []
+        self._batched: Dict[str, Callable] = {}        # in_axes repr -> jit
+        self._batch_rows = weakref.WeakKeyDictionary()  # ledger -> row name
+
+    # -- introspection ---------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    @property
+    def n_constants(self) -> int:
+        return sum(1 for op in self.ops for d in op.leaves
+                   if isinstance(d, Lit))
+
+    def summary(self) -> str:
+        edges = sum(1 for op in self.ops for d in op.leaves
+                    if isinstance(d, Ref))
+        return (f"RegionProgram({self.name!r}: {len(self.ops)} ops, "
+                f"{self.n_inputs} input leaves, {edges} dataflow edges, "
+                f"{self.n_constants} constants)")
+
+    # -- replay ----------------------------------------------------------
+    def _input_leaves(self, inputs: tuple) -> List[Any]:
+        if not inputs:
+            return self._example_in_leaves
+        leaves, tree = jax.tree.flatten(inputs)
+        if tree != self.in_tree:
+            raise ValueError(
+                f"replay inputs structure {tree} != captured {self.in_tree}")
+        return leaves
+
+    def replay(self, executor, *inputs):
+        """Re-issue the trace through an executor.  ``executor`` may be a
+        synchronous :class:`~repro.core.regions.Executor` (any policy) or an
+        :class:`AsyncExecutor` (same results, overlapped staging)."""
+        if hasattr(executor, "replay_program"):
+            return executor.replay_program(self, *inputs)
+        return self._replay_sequential(executor.run, inputs)
+
+    def _replay_sequential(self, run: Callable, inputs: tuple):
+        in_leaves = self._input_leaves(inputs)
+        env: List[List[Any]] = []
+        resolve = _resolver(env, in_leaves)
+        for op in self.ops:
+            args, kwargs = jax.tree.unflatten(
+                op.in_tree, [resolve(d) for d in op.leaves])
+            out = run(op.region, *args, **kwargs)
+            env.append(jax.tree.leaves(out))
+        return jax.tree.unflatten(self.out_tree,
+                                  [resolve(d) for d in self.out_leaves])
+
+    # -- batched replay --------------------------------------------------
+    def as_fn(self) -> Callable:
+        """The program as one pure function of its inputs (region fns
+        composed by the recorded dataflow; constants closed over).  This is
+        what ``replay_batch`` vmaps — no executor, no staging: the fused
+        beyond-paper path."""
+        def fn(*inputs):
+            in_leaves = self._input_leaves(inputs)
+            env: List[List[Any]] = []
+            resolve = _resolver(env, in_leaves)
+            for op in self.ops:
+                args, kwargs = jax.tree.unflatten(
+                    op.in_tree, [resolve(d) for d in op.leaves])
+                env.append(jax.tree.leaves(op.region.fn(*args, **kwargs)))
+            return jax.tree.unflatten(self.out_tree,
+                                      [resolve(d) for d in self.out_leaves])
+        return fn
+
+    def replay_batch(self, *stacked_inputs, executor=None, in_axes=0):
+        """Replay N independent instances through one vmapped composite.
+
+        ``stacked_inputs`` mirror the captured input structure with a
+        leading batch axis on every array leaf (``in_axes`` as in
+        ``jax.vmap``).  Captured constants broadcast.  The batch is
+        accounted as one ledger row ``<name>[batch]`` on the executor's
+        ledger (when given)."""
+        key = repr(in_axes)           # distinct axes specs compile separately
+        batched = self._batched.get(key)
+        if batched is None:
+            batched = self._batched[key] = jax.jit(
+                jax.vmap(self.as_fn(), in_axes=in_axes))
+        t0 = time.perf_counter()
+        out = batched(*stacked_inputs)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        if executor is not None:
+            sizes = [int(a.size) for a in jax.tree.leaves(stacked_inputs)
+                     if hasattr(a, "size")]
+            executor.ledger.record(
+                self._batch_row(executor.ledger), device=True, offloaded=True,
+                compute_s=dt, elems=max(sizes, default=0))
+        return out
+
+    def _batch_row(self, ledger: Ledger) -> str:
+        """Ledger row for this program's batched replays — weak-keyed by
+        ledger object (not id()) so a recycled address can never resurrect
+        a stale row name."""
+        name = self._batch_rows.get(ledger)
+        if name is None:
+            name = self._batch_rows[ledger] = ledger.register(
+                f"{self.name}[batch]", True)
+        return name
+
+
+def capture(fn: Callable, *example_inputs, name: str = "program"
+            ) -> RegionProgram:
+    """Record ``fn(run, *example_inputs)`` into a :class:`RegionProgram`.
+
+    ``fn`` receives a recording ``run(region, *args, **kwargs)`` callable in
+    place of ``Executor.run``; every call is executed eagerly (so Python
+    control flow sees concrete values) and recorded with its dataflow.
+    """
+    prog = RegionProgram(name)
+    in_leaves, prog.in_tree = jax.tree.flatten(example_inputs)
+    prog.n_inputs = len(in_leaves)
+    prog._example_in_leaves = in_leaves
+    # id -> descriptor for every live array leaf we know the origin of;
+    # keepalive pins them so ids stay unique for the capture's duration
+    origin: Dict[int, Any] = {}
+    keepalive: List[Any] = []
+    for i, leaf in enumerate(in_leaves):
+        if _is_array(leaf):
+            origin[id(leaf)] = In(i)
+            keepalive.append(leaf)
+
+    def run(target_region, *args, **kwargs):
+        r = as_region(target_region)
+        leaves, keys, tree = _flatten_call(args, kwargs)
+        desc = [origin.get(id(x), None) if _is_array(x) else Lit(x)
+                for x in leaves]
+        desc = [d if d is not None else Lit(x)
+                for d, x in zip(desc, leaves)]
+        op = OpCall(r, tree, desc, keys, r.size_fn(args, kwargs))
+        out = r.jitted(*args, **kwargs)         # eager: drives control flow
+        out_leaves = jax.tree.leaves(out)
+        op.out_tree = jax.tree.structure(out)
+        op.n_out = len(out_leaves)
+        k = len(prog.ops)
+        for j, ol in enumerate(out_leaves):
+            if _is_array(ol):
+                origin[id(ol)] = Ref(k, j)
+                keepalive.append(ol)
+        prog.ops.append(op)
+        return out
+
+    result = fn(run, *example_inputs)
+    res_leaves, prog.out_tree = jax.tree.flatten(result)
+    prog.out_leaves = [origin.get(id(x), Lit(x)) if _is_array(x) else Lit(x)
+                       for x in res_leaves]
+    del keepalive
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# AsyncExecutor: one-step lookahead staging
+# ---------------------------------------------------------------------------
+
+def _leaf_space(region: Region, key) -> Optional[umem.MemSpace]:
+    """The MemSpace hint (if any) governing the top-level arg/kwarg ``key``
+    — per-leaf mirror of ``Placer.place_args``."""
+    spaces = region.arg_spaces
+    if not spaces:
+        return None
+    sp = spaces.get(key)
+    if sp is None and isinstance(key, int):
+        for pname, idx in region._param_index.items():
+            if idx == key and pname in spaces:
+                return spaces[pname]
+    return sp
+
+
+@dataclasses.dataclass
+class _Prefetch:
+    """Result of a background staging task for one upcoming op."""
+    staged: Dict[int, Any]       # leaf index -> staged device leaf
+    seconds: float
+    nbytes: int
+    t0: float
+    t1: float
+
+
+class AsyncExecutor:
+    """Replays :class:`RegionProgram`\\ s under one policy with one-step
+    staging lookahead (double-buffered through a
+    :class:`~repro.core.pool.BufferRotation`).
+
+    While op *k* computes, a single staging thread migrates op *k+1*'s
+    already-available operand leaves (program inputs, constants, outputs of
+    ops < *k*) into the next pooled buffer bank.  Leaves produced by op *k*
+    itself cannot be prefetched and are staged synchronously at issue time.
+    The overlap between the prefetch interval and op *k*'s compute interval
+    is recorded as ``overlap_s`` on op *k+1*'s ledger row.
+
+    ``run`` delegates to a synchronous inner ``Executor`` so an
+    AsyncExecutor can stand anywhere an Executor does; the lookahead only
+    engages on whole programs via ``replay`` / ``replay_program``.
+    """
+
+    def __init__(self, policy: ExecutionPolicy, ledger: Optional[Ledger] = None,
+                 lookahead_depth: int = 2):
+        self.policy = policy
+        self.ledger = ledger or Ledger(policy.name + "+async")
+        self.mode = policy.name + "+async"
+        self.lookahead_depth = lookahead_depth
+        self._inner = Executor(policy, self.ledger)
+
+    # -- Executor protocol ----------------------------------------------
+    def run(self, target_region, *args, **kwargs):
+        return self._inner.run(target_region, *args, **kwargs)
+
+    def report(self) -> dict:
+        rep = self.ledger.coverage_report()
+        rep["mode"] = self.mode
+        return rep
+
+    # -- program replay --------------------------------------------------
+    def replay_program(self, prog: RegionProgram, *inputs):
+        pol = self.policy
+        stager = pol.stager
+        if not getattr(stager, "stages", False) or \
+                not hasattr(stager, "stage_leaves"):
+            # nothing to overlap (APU/host model): plain sequential replay
+            return prog._replay_sequential(self._inner.run, inputs)
+        return self._replay_overlapped(prog, inputs)
+
+    def _replay_overlapped(self, prog: RegionProgram, inputs: tuple):
+        pol = self.policy
+        stager = pol.stager
+        in_leaves = prog._input_leaves(inputs)
+        env: List[List[Any]] = []
+        rotation = BufferRotation(pool=stager.device_pool,
+                                  depth=self.lookahead_depth)
+        resolve = _resolver(env, in_leaves)
+
+        def will_stage(op: OpCall) -> bool:
+            """Predict whether op will stage (routing from the captured
+            example size; a wrong prediction only wastes one prefetch)."""
+            tgt = pol.router.target(op.region, (), {}, size=op.example_size)
+            return op.region.offloaded and tgt != "host"
+
+        def placed(op: OpCall, i: int, leaf):
+            sp = _leaf_space(op.region, op.arg_keys[i])
+            if sp is not None and pol.placer.honor_hints:
+                return umem.tree_place(leaf, sp,
+                                       min_bytes=pol.placer.min_bytes)
+            return leaf
+
+        def prefetch_task(op: OpCall, ready: List[Tuple[int, Any]]):
+            t0 = time.perf_counter()
+            staged, s, b = stager.stage_leaves(
+                [placed(op, i, leaf) for i, leaf in ready], rotation)
+            return _Prefetch({i: y for (i, _), y in zip(ready, staged)},
+                             s, b, t0, time.perf_counter())
+
+        pending: Optional[Tuple[int, Any]] = None      # (op index, future)
+        prev_compute: Tuple[float, float] = (0.0, 0.0)
+        with ThreadPoolExecutor(max_workers=1) as tp:
+            for k, op in enumerate(prog.ops):
+                r = op.region
+                raw = [resolve(d) for d in op.leaves]
+                args, kwargs = jax.tree.unflatten(op.in_tree, raw)
+                n = r.size_fn(args, kwargs)
+                tgt = pol.router.target(r, args, kwargs, size=n)
+                stage = stager.stages and r.offloaded and tgt != "host"
+                staging_s, staging_b, overlap_s = 0.0, 0, 0.0
+                pf: Optional[_Prefetch] = None
+                if pending is not None and pending[0] == k:
+                    pf = pending[1].result()
+                    pending = None
+                if stage:
+                    staged_map = dict(pf.staged) if pf else {}
+                    if pf:
+                        staging_s += pf.seconds
+                        staging_b += pf.nbytes
+                        c0, c1 = prev_compute
+                        overlap_s = max(0.0, min(pf.t1, c1) - max(pf.t0, c0))
+                    todo = [(i, leaf) for i, leaf in enumerate(raw)
+                            if _is_array(leaf) and i not in staged_map]
+                    if todo:
+                        staged, s, b = stager.stage_leaves(
+                            [placed(op, i, leaf) for i, leaf in todo],
+                            rotation)
+                        staging_s += s
+                        staging_b += b
+                        staged_map.update(
+                            {i: y for (i, _), y in zip(todo, staged)})
+                    staged_leaves = [staged_map.get(i, leaf)
+                                     for i, leaf in enumerate(raw)]
+                    args, kwargs = jax.tree.unflatten(op.in_tree,
+                                                      staged_leaves)
+                else:
+                    # not staging (host target / no directive): mirror the
+                    # sync Executor's placement; a mispredicted prefetch is
+                    # simply dropped (its copies are value-equal and its
+                    # bank drains at the end)
+                    args, kwargs = pol.placer.place_args(r, args, kwargs)
+                t0 = time.perf_counter()
+                out = r.executable(tgt)(*args, **kwargs)
+                # submit the NEXT op's prefetch before blocking on this
+                # compute — this ordering is the entire overlap
+                if k + 1 < len(prog.ops):
+                    nxt = prog.ops[k + 1]
+                    if will_stage(nxt):
+                        ready = []
+                        for i, d in enumerate(nxt.leaves):
+                            if isinstance(d, Ref) and d.op >= k:
+                                continue        # depends on op k: not ready
+                            x = resolve(d)
+                            if _is_array(x):
+                                ready.append((i, x))
+                        if ready:
+                            rotation.advance()
+                            pending = (k + 1,
+                                       tp.submit(prefetch_task, nxt, ready))
+                jax.block_until_ready(out)
+                t1 = time.perf_counter()
+                prev_compute = (t0, t1)
+                if stage:
+                    out, s, b = stager.stage_out(r, out, None)
+                    staging_s += s
+                    staging_b += b
+                    rotation.retire()       # this op's staged inputs are dead
+                out = pol.placer.place_result(r, out)
+                device = r.offloaded if tgt == "default" else (tgt == "device")
+                self.ledger.record(self._inner._row_name(r), device=device,
+                                   offloaded=r.offloaded, compute_s=t1 - t0,
+                                   staging_s=staging_s,
+                                   staging_bytes=staging_b, elems=n,
+                                   overlap_s=overlap_s)
+                env.append(jax.tree.leaves(out))
+        rotation.drain()
+        return jax.tree.unflatten(prog.out_tree,
+                                  [resolve(d) for d in prog.out_leaves])

@@ -316,12 +316,18 @@ class MigrationStager:
         default_factory=DeviceBufferPool)
     stages = True
 
-    def _migrate_in(self, x):
+    def _migrate_in(self, x, rotation=None):
         if not hasattr(x, "nbytes"):
             return x
         h = np.asarray(x)                               # host page read
-        dst = self.device_pool.acquire(h.shape, h.dtype)
-        return _copy_into(h, dst)                       # host -> device copy
+        pool = rotation.pool if rotation is not None else self.device_pool
+        dst = pool.acquire(h.shape, h.dtype)
+        y = _copy_into(h, dst)                          # host -> device copy
+        if rotation is not None:
+            # the copy DONATES dst; the bank must hold the result (which
+            # owns the recycled storage), never the consumed buffer
+            rotation.register(y)
+        return y
 
     @staticmethod
     def _aliases(y, buf) -> bool:
@@ -359,6 +365,17 @@ class MigrationStager:
         t0 = time.perf_counter()
         nbytes = self.arena.bytes_of((args, kwargs))
         staged = jax.tree.map(self._migrate_in, (args, kwargs))
+        jax.block_until_ready(staged)
+        return staged, time.perf_counter() - t0, nbytes
+
+    def stage_leaves(self, leaves, rotation=None):
+        """Migrate a flat list of leaves host->device, acquiring through a
+        :class:`~repro.core.pool.BufferRotation` bank when one is given —
+        the double-buffered path of the async lookahead replay
+        (``repro.core.program``).  Returns (staged_leaves, seconds, bytes)."""
+        t0 = time.perf_counter()
+        nbytes = self.arena.bytes_of(leaves)
+        staged = [self._migrate_in(x, rotation) for x in leaves]
         jax.block_until_ready(staged)
         return staged, time.perf_counter() - t0, nbytes
 

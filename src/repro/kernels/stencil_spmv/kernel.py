@@ -1,6 +1,6 @@
 """Pallas kernel: 7-point DIA stencil SpMV (OpenFOAM lduMatrix::Amul on TPU).
 
-TPU adaptation (DESIGN.md §2): the unstructured LDU face-list gather/scatter
+TPU adaptation (docs/DESIGN.md §2): the unstructured LDU face-list gather/scatter
 becomes, on a structured grid, y[i] = d[i]*x[i] + sum_f off[f][i]*x[i+s_f]
 with six constant strides s_f in the flattened index space. The kernel
 processes the flat field in VMEM chunks; the input is pre-padded by the

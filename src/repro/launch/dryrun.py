@@ -13,7 +13,7 @@ production mesh, ``.lower().compile()``, and extract:
     (all-gather / all-reduce / reduce-scatter / all-to-all /
     collective-permute), which cost_analysis does not report,
 
-and derive the three roofline terms (EXPERIMENTS.md §Roofline) against
+and derive the three roofline terms (docs/EXPERIMENTS.md §Roofline) against
 TPU v5e constants. One JSON artifact per cell; ``--sweep`` runs every cell in
 a subprocess (resumable — existing artifacts are skipped).
 
@@ -234,6 +234,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_path=None,
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t1, 2)
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):     # older jax: one dict per device
+            cost = cost[0] if cost else {}
         try:
             mem = compiled.memory_analysis()
             rec["memory_analysis"] = {

@@ -92,8 +92,9 @@ _INSTR_RE = re.compile(
 def _split_operands(argstr: str) -> List[str]:
     """Names referenced before the closing paren of the operand list."""
     depth = 1
-    out = []
-    cur = []
+    bracket = 0     # [] / {} nesting: operand type annotations carry shapes
+    out = []        # and layouts ("f32[256,256]{1,0} %x") whose commas must
+    cur = []        # not split the operand list
     for ch in argstr:
         if ch == "(":
             depth += 1
@@ -101,7 +102,11 @@ def _split_operands(argstr: str) -> List[str]:
             depth -= 1
             if depth == 0:
                 break
-        if depth >= 1 and ch == "," and depth == 1:
+        elif ch in "[{":
+            bracket += 1
+        elif ch in "]}":
+            bracket -= 1
+        if ch == "," and depth == 1 and bracket == 0:
             out.append("".join(cur))
             cur = []
         else:

@@ -67,7 +67,7 @@ def _largest_divisor(T: int, G: int) -> int:
 def moe_mlp(p, x, cfg: ModelConfig, shd=noshard, n_groups: int = 16):
     """x [B, S, d] -> (y [B, S, d], aux_loss).
 
-    GROUP-LOCAL dispatch (beyond-paper perf iteration, EXPERIMENTS.md SPerf):
+    GROUP-LOCAL dispatch (beyond-paper perf iteration, docs/EXPERIMENTS.md SPerf):
     tokens are split into G groups aligned with the data shards; routing,
     ranking and the capacity scatter/gather are all per-group (batched, so
     SPMD partitions them along G with no cross-shard collectives), and the

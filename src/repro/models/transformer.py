@@ -38,7 +38,7 @@ class Ctx:
     mode: str = "train"                  # train | prefill | decode
     shd: Callable = noshard
     q_chunk: int = 512
-    rwkv_chunk: int = 32   # perf iteration C (EXPERIMENTS.md SPerf)
+    rwkv_chunk: int = 32   # perf iteration C (docs/EXPERIMENTS.md SPerf)
     positions3: Optional[jax.Array] = None   # [B,T,3] for M-RoPE
     pos: Optional[jax.Array] = None          # decode position (scalar)
     enc_out: Optional[jax.Array] = None      # whisper encoder output

@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""Doc-link check: fail on references to documentation files that don't
+exist in-repo.
+
+Scans Python sources (docstrings/comments) and the curated documentation
+set for ``*.md`` references and verifies each target exists, resolved
+against the repo root or the referencing file's directory.  Historical /
+externally-generated files (CHANGES.md, ISSUE.md, PAPER*.md, SNIPPETS.md,
+ROADMAP.md) are exempt — they quote other repos and past states.
+
+  python tools/check_doc_links.py        # exit 1 on any dangling reference
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# files whose .md mentions are not promises about THIS repo's tree
+EXEMPT = {"CHANGES.md", "ISSUE.md", "PAPER.md", "PAPERS.md", "SNIPPETS.md",
+          "ROADMAP.md"}
+SKIP_DIRS = {".git", ".github", "artifacts", "__pycache__", ".pytest_cache"}
+
+MD_REF = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.md\b")
+
+
+def scanned_files():
+    for path in sorted(ROOT.rglob("*")):
+        if any(part in SKIP_DIRS for part in path.parts):
+            continue
+        if path.suffix == ".py" or (path.suffix == ".md"
+                                    and path.name not in EXEMPT):
+            yield path
+
+
+def check() -> int:
+    dangling = []
+    for path in scanned_files():
+        text = path.read_text(errors="replace")
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for ref in MD_REF.findall(line):
+                if "http://" in line or "https://" in line:
+                    continue
+                if (ROOT / ref).exists() or (path.parent / ref).exists():
+                    continue
+                dangling.append((path.relative_to(ROOT), lineno, ref))
+    for rel, lineno, ref in dangling:
+        print(f"{rel}:{lineno}: dangling doc reference: {ref}")
+    if dangling:
+        print(f"\n{len(dangling)} dangling doc reference(s).")
+        return 1
+    print("doc links ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check())
