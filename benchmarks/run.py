@@ -125,6 +125,57 @@ def fig6b_overlap(steps: int = 2, grid=(16, 16, 16)):
     return rep
 
 
+def fig_scaling(steps: int = 2, grid="8,8,8", policy="unified"):
+    """Beyond-paper scaling figure: the captured SIMPLE step replayed
+    domain-decomposed over 1/2/4/8 simulated APUs
+    (repro.core.shard_program + repro.launch.scaling).
+
+    Each node size runs in a fresh subprocess — the APU count must be in
+    XLA_FLAGS before the first jax import, and this process has already
+    imported jax with one device.  Every run asserts single- vs
+    multi-device numerical parity (docs/DESIGN.md §2 tolerance) and the
+    derived column carries the node-level compute/staging/exchange split
+    from the aggregated per-device ledgers.  On a CPU container all
+    "APUs" share the same cores, so the FOM here is the exchange
+    accounting and the parity guarantee, not wall-clock speedup (see
+    docs/SCALING.md).  APU counts override via FIG_SCALING_APUS=1,2."""
+    import os
+    import subprocess
+    import sys
+    apus = [int(x) for x in
+            os.environ.get("FIG_SCALING_APUS", "1,2,4,8").split(",") if x]
+    base_n, base = apus[0], None        # ratio column anchors on the
+    for n in apus:                      # first (smallest) node size run
+        out = Path(f"artifacts/scaling/apu{n}.json")
+        out.parent.mkdir(parents=True, exist_ok=True)
+        cmd = [sys.executable, "-m", "repro.launch.scaling",
+               "--apus", str(n), "--steps", str(steps), "--grid", grid,
+               "--policy", policy, "--inner-max", "6", "--out", str(out)]
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        if r.returncode != 0:
+            row(f"fig_scaling/apus{n}", 0.0,
+                f"FAILED rc={r.returncode}:{r.stderr.strip()[-160:]}")
+            raise RuntimeError(f"fig_scaling subprocess failed for "
+                               f"{n} APUs:\n{r.stderr[-2000:]}")
+        rec = json.loads(out.read_text())
+        assert rec["parity_ok"], rec          # acceptance criterion
+        rep = rec["report"]
+        if base is None:
+            base = rec["fom_sharded_s"]
+        dev0 = rep["per_device"][0]
+        row(f"fig_scaling/apus{n}", rec["fom_sharded_s"] * 1e6,
+            f"parity_max_err={rec['parity_max_abs_err']:.2e}"
+            f";compute_s={rep['compute_s']:.4f}"
+            f";staging_s={rep['staging_s']:.4f}"
+            f";exchange_s={rep['exchange_s']:.4f}"
+            f";exchange_fraction={rep['exchange_fraction']:.3f}"
+            f";exchange_bytes={rep['exchange_bytes']}"
+            f";dev0_compute_s={dev0['compute_s']:.4f}"
+            f";dev0_exchange_s={dev0['exchange_s']:.4f}"
+            f";vs_{base_n}apu=x{rec['fom_sharded_s'] / max(base, 1e-12):.2f}")
+    return apus
+
+
 def fig4_coverage(grid=(12, 12, 12)):
     """Paper Figs 2 vs 4: offload coverage, PETSc-interface mode (assembly
     on host, solver offloaded) vs full directive mode."""
@@ -283,6 +334,7 @@ BENCHES = {
     "fig5_speedup": fig5_speedup,
     "fig6_migration": fig6_migration,
     "fig6b_overlap": fig6b_overlap,
+    "fig_scaling": fig_scaling,
     "fig4_coverage": fig4_coverage,
     "pool": pool_bench,
     "dispatch": dispatch_bench,

@@ -19,6 +19,28 @@ import jax.numpy as jnp
 
 from repro.cfd.grid import Grid, NEIGHBORS, shift
 
+#: the DIA offset table in (grid_axis, offset) form — one entry per stored
+#: band.  This is the canonical stencil declaration consumed by sharded
+#: replay (``repro.core.shard_program.halo_width`` infers the halo width a
+#: domain decomposition must exchange from exactly this tuple).
+STENCIL_OFFSETS = NEIGHBORS
+
+
+def compose_offsets(a, b):
+    """Offset table of a stencil applied after another (Minkowski sum).
+
+    A region that chains two 7-point operators (e.g. face interpolation
+    followed by a divergence) reaches two cells along each axis; its
+    declared stencil is ``compose_offsets(STENCIL_OFFSETS, STENCIL_OFFSETS)``
+    so halo-width inference sees the composed reach, not the single-hop one.
+    """
+    out = {(ax, d) for ax, d in a} | {(ax, d) for ax, d in b}
+    for ax1, d1 in a:
+        for ax2, d2 in b:
+            if ax1 == ax2 and d1 + d2 != 0:
+                out.add((ax1, d1 + d2))
+    return tuple(sorted(out))
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass

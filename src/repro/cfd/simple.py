@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cfd import fvc, fvm
-from repro.cfd.dia import DiaMatrix, amul_ref
+from repro.cfd.dia import DiaMatrix, STENCIL_OFFSETS, amul_ref
 from repro.cfd.fields import make_field_ops
 from repro.cfd.grid import Grid
 from repro.cfd.precond import rb_dilu_factor
@@ -76,8 +76,12 @@ class SimpleFoam:
         self.red, self.black = cfg.grid.red_black_masks()
         asm = dict(ledger=self.ledger)
 
+        # stencil/halo declarations drive the multi-APU replay
+        # (repro.core.shard_program): face interpolation and gradients
+        # reach one neighbor along each grid axis
         @region("assemble(momentum)", offloaded=not assemble_on_host,
-                        **asm)
+                        stencil=STENCIL_OFFSETS,
+                        halo_args=("u", "v", "w", "p"), **asm)
         def assemble_momentum(u, v, w, p):
             g = cfg.grid
             phi = fvm.face_fluxes(g, u, v, w)
@@ -95,7 +99,8 @@ class SimpleFoam:
             return (Au.diag, Au.off, ru, Av.diag, rv, Aw.diag, rw)
 
         @region("assemble(pressure)", offloaded=not assemble_on_host,
-                        **asm)
+                        stencil=STENCIL_OFFSETS,
+                        halo_args=("u_s", "v_s", "w_s"), **asm)
         def assemble_pressure(rAU, u_s, v_s, w_s):
             g = cfg.grid
             # laplacian(rAU, p) with zero-gradient walls (singular -> pinned)
@@ -111,7 +116,8 @@ class SimpleFoam:
             rhs = jnp.where(pin > 0, 0.0, -div_hbya)
             return (diag, off, rhs)
 
-        @region("DILU factor", **asm)
+        @region("DILU factor", stencil=STENCIL_OFFSETS,
+                halo_args=("diag", "off"), **asm)
         def factor(diag, off):
             P = rb_dilu_factor(DiaMatrix(diag, off), self.red)
             return P.rdiag
@@ -121,7 +127,7 @@ class SimpleFoam:
             # U = HbyA - rAU*grad(p)   (listing 3 line 32 == listing 4 macro)
             return (hb_u - rAU * gpx, hb_v - rAU * gpy, hb_w - rAU * gpz)
 
-        @region("grad(p)", **asm)
+        @region("grad(p)", stencil=STENCIL_OFFSETS, halo_args=("p",), **asm)
         def grad_p(p):
             return tuple(fvc.grad(cfg.grid, p))
 
@@ -221,9 +227,33 @@ class SimpleFoam:
 
         return capture(step_fn, st.u, st.v, st.w, st.p, name="simple_step")
 
-    def replay_steps(self, prog, st: SimpleState, n: int, executor) -> tuple:
+    def replay_steps(self, prog, st: SimpleState, n: int, executor,
+                     mesh=None) -> tuple:
         """Replay a captured step ``n`` times, chaining the state through.
-        Returns (state, fom_seconds_per_step)."""
+        Returns (state, fom_seconds_per_step).
+
+        ``mesh`` (a 1-D APU mesh from ``repro.launch.mesh.make_apu_mesh``)
+        domain-decomposes the replay across simulated APUs: ``executor``'s
+        policy is rebound into a :class:`~repro.core.shard_program
+        .ShardExecutor` and fields shard along the grid z axis with halo
+        exchange at every stencil region.  This convenience path builds
+        (and discards) the shard executor internally — nothing lands on
+        the passed executor's ledger; pass a pre-built
+        ``ShardExecutor``/``ShardedProgram`` as ``executor`` instead when
+        you need the per-device ledgers afterwards (that is what
+        ``repro.launch.scaling`` does)."""
+        if mesh is not None:
+            from repro.core.shard_program import (ShardedProgram,
+                                                  ShardExecutor)
+            if not hasattr(executor, "replay_program"):
+                executor = ShardExecutor(
+                    getattr(executor, "policy", None), mesh)
+            elif not isinstance(executor, (ShardExecutor, ShardedProgram)):
+                # an AsyncExecutor etc. would silently replay single-device
+                raise ValueError(
+                    f"mesh= cannot rebind {type(executor).__name__}; pass "
+                    "a plain Executor (or a ShardExecutor built on the "
+                    "mesh) instead")
         t0 = time.perf_counter()
         for _ in range(n):
             u, v, w, p = prog.replay(executor, st.u, st.v, st.w, st.p)

@@ -21,7 +21,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.cfd.dia import DiaMatrix, amul_ref
+from repro.cfd.dia import (DiaMatrix, STENCIL_OFFSETS, amul_ref,
+                           compose_offsets)
 from repro.cfd.precond import RBDilu, jacobi_apply, rb_dilu_apply, rb_dilu_factor
 from repro.core.ledger import Ledger
 from repro.core.regions import region
@@ -47,11 +48,17 @@ def make_solver_regions(ledger: Optional[Ledger] = None):
     # the process-global ledger with uniquified duplicate rows
     kw = dict(ledger=ledger or Ledger("solver_regions"))
 
-    @region("Amul", **kw)
+    # stencil declarations feed sharded replay (repro.core.shard_program):
+    # halo width along the decomposed grid axis is inferred from the DIA
+    # offsets; halo_args names the operands whose neighbors are read
+    @region("Amul", stencil=STENCIL_OFFSETS, halo_args=("x",), **kw)
     def amul_r(diag, off, x):
         return amul_ref(DiaMatrix(diag, off), x)
 
-    @region("precondition(DILU)", **kw)
+    # the two half-sweeps chain (black reads updated red reads r): reach 2
+    @region("precondition(DILU)",
+            stencil=compose_offsets(STENCIL_OFFSETS, STENCIL_OFFSETS),
+            halo_args=("r",), **kw)
     def precond_r(rdiag, red, off, r):
         return rb_dilu_apply(RBDilu(rdiag, red), DiaMatrix(rdiag * 0, off), r)
 

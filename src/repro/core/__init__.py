@@ -12,6 +12,9 @@ C4 memory pooling  -> repro.core.pool       (HostStagingPool, DeviceBufferPool)
 layers captured region programs on top: record one step, replay it under
 any policy with lookahead staging overlap (AsyncExecutor) or vmapped over
 N independent instances (RegionProgram.replay_batch).
+``repro.core.shard_program`` scales a captured program across a mesh of
+simulated APUs: domain-decomposed replay with explicit halo-exchange
+regions and per-device ledgers aggregated into one node report.
 """
 from repro.core.dispatch import DispatchStats, TargetDispatch, offload
 from repro.core.executors import (DiscreteExecutor, HostExecutor,
@@ -20,6 +23,8 @@ from repro.core.ledger import GLOBAL_LEDGER, Ledger, RegionRecord, offload_regio
 from repro.core.pool import (BufferRotation, DeviceBufferPool,
                              HostStagingPool, POOL_MIN_ELEMS, PoolStats)
 from repro.core.program import AsyncExecutor, RegionProgram, capture
+from repro.core.shard_program import (ShardExecutor, ShardedProgram,
+                                      halo_width, shard_program)
 from repro.core.regions import (DEFAULT_CUTOFF, AdaptivePolicy, ComposedPolicy,
                                 DiscretePolicy, ExecutionPolicy, Executor,
                                 HostPolicy, MigrationStager, NullStager,

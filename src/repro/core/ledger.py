@@ -29,13 +29,15 @@ class RegionRecord:
     staging_bytes: int = 0
     overlap_s: float = 0.0              # staging hidden behind earlier compute
     #                                     (async lookahead replay; <= staging_s)
+    exchange_s: float = 0.0             # inter-APU halo/boundary traffic time
+    exchange_bytes: int = 0             # (sharded replay; Infinity Fabric model)
     host_elems: int = 0                 # routing accounting (was DispatchStats)
     device_elems: int = 0
     cutoff: Optional[int] = None        # calibrated TARGET_CUT_OFF, if any
 
     @property
     def total_s(self) -> float:
-        return self.compute_s + self.staging_s
+        return self.compute_s + self.staging_s + self.exchange_s
 
     @property
     def offload_fraction(self) -> float:
@@ -77,7 +79,8 @@ class Ledger:
     def record(self, name: str, *, device: bool, compute_s: float,
                staging_s: float = 0.0, staging_bytes: int = 0,
                offloaded: bool = True, elems: int = 0,
-               overlap_s: float = 0.0) -> None:
+               overlap_s: float = 0.0, exchange_s: float = 0.0,
+               exchange_bytes: int = 0) -> None:
         r = self.region(name, offloaded)
         r.calls += 1
         r.device_calls += int(device)
@@ -86,6 +89,8 @@ class Ledger:
         r.staging_s += staging_s
         r.staging_bytes += staging_bytes
         r.overlap_s += min(overlap_s, staging_s)
+        r.exchange_s += exchange_s
+        r.exchange_bytes += exchange_bytes
         if device:
             r.device_compute_s += compute_s
             r.device_elems += elems
@@ -101,9 +106,41 @@ class Ledger:
         for r in self.regions.values():
             r.calls = r.device_calls = r.host_calls = 0
             r.compute_s = r.staging_s = r.overlap_s = 0.0
+            r.exchange_s = 0.0
+            r.staging_bytes = r.exchange_bytes = 0
             r.device_compute_s = r.host_compute_s = 0.0
-            r.staging_bytes = 0
             r.host_elems = r.device_elems = 0
+
+    def merge_from(self, other: "Ledger") -> None:
+        """Accumulate another ledger's rows into this one (rows matched by
+        name).  This is the node-level aggregation of the sharded replay:
+        per-device ledgers fold into one, and ``coverage_report()`` on the
+        result is the node view."""
+        for r in other.regions.values():
+            m = self.region(r.name, r.offloaded)
+            m.calls += r.calls
+            m.device_calls += r.device_calls
+            m.host_calls += r.host_calls
+            m.compute_s += r.compute_s
+            m.device_compute_s += r.device_compute_s
+            m.host_compute_s += r.host_compute_s
+            m.staging_s += r.staging_s
+            m.staging_bytes += r.staging_bytes
+            m.overlap_s += r.overlap_s
+            m.exchange_s += r.exchange_s
+            m.exchange_bytes += r.exchange_bytes
+            m.host_elems += r.host_elems
+            m.device_elems += r.device_elems
+            if m.cutoff is None:
+                m.cutoff = r.cutoff
+
+    @classmethod
+    def merged(cls, ledgers, name: str = "node") -> "Ledger":
+        """A new ledger holding the row-wise sum of ``ledgers``."""
+        out = cls(name)
+        for l in ledgers:
+            out.merge_from(l)
+        return out
 
     def clear(self) -> None:
         """Drop all region rows. Long-lived processes that rebuild region
@@ -119,8 +156,10 @@ class Ledger:
         # re-attribute the row's host time (Fig 4 coverage would read ~1.0)
         dev = sum(r.device_compute_s for r in self.regions.values()
                   if r.offloaded)
+        compute = sum(r.compute_s for r in self.regions.values())
         staging = sum(r.staging_s for r in self.regions.values())
         overlap = sum(r.overlap_s for r in self.regions.values())
+        exchange = sum(r.exchange_s for r in self.regions.values())
         host_calls = sum(r.host_calls for r in self.regions.values())
         device_calls = sum(r.device_calls for r in self.regions.values())
         host_elems = sum(r.host_elems for r in self.regions.values())
@@ -131,10 +170,19 @@ class Ledger:
             "offloaded_regions": sum(1 for r in self.regions.values()
                                      if r.offloaded),
             "total_s": total,
+            "compute_s": compute,
             "device_compute_s": dev,
             "staging_s": staging,
             "device_fraction": dev / total if total else 0.0,
             "staging_fraction": staging / total if total else 0.0,  # Fig 6
+            # inter-APU boundary traffic (sharded replay, repro.core
+            # .shard_program): explicit halo-exchange regions land their
+            # seconds/bytes here, next to the compute and staging they
+            # trade against — the Infinity Fabric split of the node report
+            "exchange_s": exchange,
+            "exchange_bytes": sum(r.exchange_bytes
+                                  for r in self.regions.values()),
+            "exchange_fraction": exchange / total if total else 0.0,
             # async lookahead replay (repro.core.program): how much of the
             # staging storm was hidden behind compute, and the seconds saved
             # vs a fully synchronous replay of the same program

@@ -139,23 +139,47 @@ class DeviceBufferPool:
         except Exception:                   # pragma: no cover
             self._default_kind = "device"
 
-    def _key(self, shape, dtype, memory_kind):
-        # normalize the backend's default kind to "device" so release()
-        # (which reads the buffer's actual sharding kind) and acquire(None)
-        # agree on platforms whose default kind isn't named "device"
+    def _key(self, shape, dtype, memory_kind, sharding=None):
+        # a mesh sharding IS the placement key: buffers split the same way
+        # over the same mesh recycle together (per-APU shards of the node
+        # replay), and never mix with single-device buckets.  Those key on
+        # memory kind, with the backend's default kind normalized to
+        # "device" so release() (which reads the buffer's actual sharding
+        # kind) and acquire(None) agree on platforms whose default kind
+        # isn't named "device"
+        if sharding is not None:
+            return (tuple(shape), str(np.dtype(dtype)), sharding)
         kind = memory_kind or "device"
         if kind == self._default_kind:
             kind = "device"
         return (tuple(shape), str(np.dtype(dtype)), kind)
 
-    def acquire(self, shape, dtype, memory_kind: Optional[str] = None):
+    def _mesh_sharding(self, buf):
+        """The buffer's NamedSharding when it was acquired against one
+        (mesh-pooled bucket), else None (single-device bucket)."""
+        try:
+            s = buf.sharding
+            return s if isinstance(s, self._jax.sharding.NamedSharding) \
+                else None
+        except Exception:
+            return None
+
+    def acquire(self, shape, dtype, memory_kind: Optional[str] = None,
+                sharding=None):
+        """A pooled jax.Array.  ``sharding`` (a hashable multi-device
+        sharding, e.g. NamedSharding) pools per-mesh-placement instead of
+        per-memory-kind — the sharded-replay path acquires its scattered
+        operand buffers here so N-APU staging reuses storage exactly like
+        the single-device discrete model (paper C4 at node scale)."""
         import jax.numpy as jnp
         elems = int(np.prod(shape)) if shape else 1
         if elems < self.min_elems:
             with self._lock:
                 self.stats.unpooled += 1
-            return jnp.zeros(shape, dtype)
-        key = self._key(shape, dtype, memory_kind)
+            buf = jnp.zeros(shape, dtype)
+            return self._jax.device_put(buf, sharding) \
+                if sharding is not None else buf
+        key = self._key(shape, dtype, memory_kind, sharding)
         with self._lock:
             bucket = self._free.get(key)
             if bucket:
@@ -165,7 +189,9 @@ class DeviceBufferPool:
             self.stats.misses += 1
             self.stats.bytes_allocated += elems * np.dtype(dtype).itemsize
         buf = jnp.zeros(shape, dtype)
-        if memory_kind and memory_kind != "device":
+        if sharding is not None:
+            buf = self._jax.device_put(buf, sharding)
+        elif memory_kind and memory_kind != "device":
             d = self._jax.devices()[0]
             sh = self._jax.sharding.SingleDeviceSharding(d, memory_kind=memory_kind)
             buf = self._jax.device_put(buf, sh)
@@ -174,7 +200,8 @@ class DeviceBufferPool:
     def release(self, buf) -> None:
         try:
             key = self._key(buf.shape, buf.dtype,
-                            getattr(buf.sharding, "memory_kind", None))
+                            getattr(buf.sharding, "memory_kind", None),
+                            self._mesh_sharding(buf))
         except Exception:
             return
         if int(np.prod(buf.shape) if buf.shape else 1) < self.min_elems:

@@ -97,6 +97,16 @@ class Region:                           # hashable, usable as dict/set keys
     :class:`MemSpace` placement hint; ``result_space`` hints where results
     should land.  Hints are *advisory*: the executing policy's placement
     axis decides whether (and above what byte threshold) to honor them.
+
+    ``stencil`` declares the region's neighbor-access pattern as a sequence
+    of ``(grid_axis, offset)`` pairs (the DIA offset table of
+    ``repro.cfd.dia`` is the canonical source).  Pointwise regions leave it
+    ``None``.  Sharded replay (``repro.core.shard_program``) reads it to
+    infer the halo width a domain decomposition must exchange before the
+    region runs; single-device executors ignore it entirely.  ``halo_args``
+    optionally narrows the exchange to the top-level arguments (positions
+    or parameter names) whose *neighbors* the stencil actually reads —
+    coefficient stacks multiply locally and need no halo.
     """
     name: str
     fn: Callable
@@ -104,6 +114,8 @@ class Region:                           # hashable, usable as dict/set keys
     size_fn: Callable = default_size
     arg_spaces: Optional[Mapping[Any, MemSpace]] = None
     result_space: Optional[MemSpace] = None
+    stencil: Optional[Sequence[Tuple[int, int]]] = None
+    halo_args: Optional[Sequence[Any]] = None
     ledger: Ledger = dataclasses.field(default_factory=lambda: GLOBAL_LEDGER)
 
     def __post_init__(self):
@@ -177,6 +189,8 @@ class Region:                           # hashable, usable as dict/set keys
         r.size_fn = default_size
         r.arg_spaces = None
         r.result_space = None
+        r.stencil = None
+        r.halo_args = None
         r.ledger = GLOBAL_LEDGER
         r._jitted = getattr(obj, "jitted", None) or jax.jit(obj)
         r._exec = {}
@@ -219,10 +233,13 @@ def as_region(obj) -> Region:
 def region(name: Optional[str] = None, *, offloaded: bool = True,
            ledger: Optional[Ledger] = None, size_fn: Optional[Callable] = None,
            placement: Optional[Mapping[Any, MemSpace]] = None,
-           result_space: Optional[MemSpace] = None):
+           result_space: Optional[MemSpace] = None,
+           stencil: Optional[Sequence[Tuple[int, int]]] = None,
+           halo_args: Optional[Sequence[Any]] = None):
     """Decorator: mark a function as one offloadable region (listings 4-6).
 
-        @region("Amul", placement={0: MemSpace.DEVICE})
+        @region("Amul", placement={0: MemSpace.DEVICE},
+                stencil=dia.STENCIL_OFFSETS, halo_args=("x",))
         def amul(diag, off, x): ...
     """
     def wrap(fn: Callable) -> Region:
@@ -230,6 +247,7 @@ def region(name: Optional[str] = None, *, offloaded: bool = True,
                       fn=fn, offloaded=offloaded,
                       size_fn=size_fn or default_size,
                       arg_spaces=placement, result_space=result_space,
+                      stencil=stencil, halo_args=halo_args,
                       ledger=ledger or GLOBAL_LEDGER)
     return wrap
 

@@ -1,0 +1,504 @@
+"""Multi-APU region programs: shard a captured replay across a device mesh.
+
+The paper ports OpenFOAM to ONE MI300A; a production node ships four of
+them linked by Infinity Fabric, and the follow-up literature ("Inter-APU
+Communication on AMD MI300A Systems via Infinity Fabric", the Grace-Hopper
+unified-memory studies) shows that scaling a unified-memory code across a
+node hinges on two things the single-device story never surfaces:
+topology-aware placement and *communication accounting* — knowing how much
+of a step is compute, how much is staging, and how much is inter-APU
+boundary traffic.
+
+This module adds that node dimension to captured programs
+(:mod:`repro.core.program`):
+
+* :func:`shard_program` / :class:`ShardedProgram` — wrap a captured
+  :class:`~repro.core.program.RegionProgram` for a 1-D ``jax.Mesh`` of N
+  simulated APUs (CPU containers simulate the node with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the
+  ``launch.mesh`` trick; :func:`repro.launch.mesh.make_apu_mesh` builds the
+  mesh).
+
+* :class:`ShardExecutor` — the executor that replays the trace
+  domain-decomposed: every array operand is placed with a ``NamedSharding``
+  splitting one dimension (``shard_dim``) over the mesh axis, every region
+  executes SPMD across all APUs (XLA partitions the *identical* region
+  function — application code is untouched, the paper's C1 claim at node
+  scale), and regions that declare a ``stencil`` get an explicit
+  **halo-exchange region** inserted before them.
+
+* halo exchange — the width is inferred from the region's declared DIA
+  offset table (:data:`repro.cfd.dia.STENCIL_OFFSETS`, see
+  :func:`halo_width`).  The exchange itself is a bit-exact value identity,
+  ``roll(roll(x, +w), -w)`` along the sharded dimension: XLA partitions
+  each roll into exactly the boundary-plane transfers a width-``w`` halo
+  swap performs (w planes across every shard boundary, each direction), so
+  the measured wall time *is* the inter-APU traffic cost while the value —
+  and therefore the replayed numerics — is unchanged.  It appears in every
+  per-device ledger as a ``halo(<region>)`` row carrying ``exchange_s`` /
+  ``exchange_bytes``.
+
+* per-device ledgers — each simulated APU owns a
+  :class:`~repro.core.ledger.Ledger`.  The decomposition is symmetric, so
+  each device's rows record its **local share**: ``1/N`` of every measured
+  wall interval and of every byte/element count.  Summing the per-device
+  ledgers (``Ledger.merged``) therefore reproduces the measured node wall
+  split exactly; ``ShardExecutor.report()`` returns that aggregate with a
+  ``per_device`` breakdown splitting compute, staging, and exchange time.
+
+Any :class:`~repro.core.regions.ExecutionPolicy` applies:
+
+- ``UnifiedPolicy`` — operands stay resident in the decomposition; only
+  halo-exchange regions move bytes between APUs (the paper's APU model,
+  scaled out: migration deleted, Fabric traffic remains).
+- ``DiscretePolicy`` — every region call stages its operands host->APUs
+  (scatter through pooled sharded buffers) and its results APUs->host: the
+  managed-memory node where the host bounce multiplies with N.
+- ``AdaptivePolicy`` — calls under the calibrated cutoff gather to the
+  host and run there (small problems don't amortize a node), the rest run
+  decomposed.
+
+Numerics: region math is elementwise/stencil arithmetic partitioned by
+XLA, so sharded replay is bit-comparable to the single-device replay of
+the same program; only compiler re-fusion across different sharding
+signatures can perturb results, within the float32 tolerance documented in
+docs/DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import time
+import weakref
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ledger import Ledger
+from repro.core.pool import DeviceBufferPool
+from repro.core.program import Lit, RegionProgram, _is_array, _resolver
+from repro.core.regions import (ExecutionPolicy, Executor, Region,
+                                UnifiedPolicy, _copy_into)
+from repro.core.umem import replicated_sharding, shard_along
+
+
+def halo_width(offsets, axis: int) -> int:
+    """Halo width a 1-D decomposition along grid axis ``axis`` must
+    exchange for a stencil with DIA offset table ``offsets`` — the maximum
+    reach of any band along that axis.
+
+        halo_width(dia.STENCIL_OFFSETS, axis=2)                  -> 1
+        halo_width(dia.compose_offsets(S, S), axis=2)            -> 2
+        halo_width(None, axis=2)                                 -> 0
+    """
+    if not offsets:
+        return 0
+    return max((abs(d) for ax, d in offsets if ax == axis), default=0)
+
+
+class ShardExecutor:
+    """Replays :class:`RegionProgram`\\ s domain-decomposed over a 1-D mesh
+    of simulated APUs, under any :class:`ExecutionPolicy`, with one
+    :class:`Ledger` per device.
+
+    ``shard_dim`` selects the array dimension split over the mesh axis
+    (default ``-1``: the trailing dimension, which for ``[nx,ny,nz]`` CFD
+    fields and ``[6,nx,ny,nz]`` DIA coefficient stacks alike is the grid z
+    axis).  Leaves whose ``shard_dim`` extent does not divide by the mesh
+    size replicate instead.  ``stencil_axis`` is the *grid* axis that
+    ``shard_dim`` decomposes (default ``shard_dim % 3``, i.e. z for 3-D
+    fields); halo widths are inferred against it from each region's
+    declared ``stencil`` offsets.
+
+    ``prog.replay(shard_executor, *inputs)`` dispatches here through the
+    standard ``replay_program`` hook, so a ShardExecutor drops in anywhere
+    an :class:`Executor` or ``AsyncExecutor`` does.
+    """
+
+    def __init__(self, policy: Optional[ExecutionPolicy], mesh,
+                 axis: str = "apu", shard_dim: int = -1,
+                 stencil_axis: Optional[int] = None):
+        self.policy = policy or UnifiedPolicy()
+        self.mesh = mesh
+        self.axis = axis
+        if axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {axis!r}: {mesh.axis_names}")
+        self.n_devices = int(mesh.devices.size)
+        self.shard_dim = shard_dim
+        self.stencil_axis = (stencil_axis if stencil_axis is not None
+                             else shard_dim % 3)
+        self.mode = f"{self.policy.name}+sharded[{self.n_devices}x{axis}]"
+        #: one ledger per simulated APU; each records its 1/N local share
+        self.ledgers: List[Ledger] = [
+            Ledger(f"{self.policy.name}@{axis}{i}")
+            for i in range(self.n_devices)]
+        # host-routed calls (adaptive cutoff) run once, undecomposed — they
+        # belong to the node, not to any one APU
+        self.host_ledger = Ledger(f"{self.policy.name}@host")
+        self._inner = Executor(self.policy, self.host_ledger)
+        self._replicated = replicated_sharding(mesh)
+        self._sharding_cache: dict = {}      # (ndim, extent) -> NamedSharding
+        # captured constants scatter across the mesh ONCE per executor, not
+        # once per replayed step; keying by the Lit descriptor object keeps
+        # it alive, so a recycled address can never alias a stale entry
+        self._lit_cache: dict = {}           # Lit descriptor -> placed leaf
+        # same-named distinct regions must not merge into one row (the
+        # Executor._row_name contract, upheld per executor here — every
+        # per-device ledger shares this executor's row names)
+        self._row_names = weakref.WeakKeyDictionary()      # Region -> str
+        self._taken_rows: set = set()
+        self._halo_regions = weakref.WeakKeyDictionary()   # Region -> Region
+        self._registry = Ledger(self.mode + "-rows")       # halo-name registry
+        stager = self.policy.stager
+        self._device_pool = getattr(stager, "device_pool", None) \
+            or DeviceBufferPool()
+
+    # -- accounting rows -------------------------------------------------
+    def _row_name(self, r: Region) -> str:
+        """Ledger row for this region across ALL of this executor's
+        per-device ledgers.  Distinct region objects that happen to share
+        a name (registered in different app ledgers) get re-uniquified —
+        the same contract ``Executor._row_name`` keeps."""
+        name = self._row_names.get(r)
+        if name is None:
+            name = r.name
+            k = 2
+            while name in self._taken_rows:
+                name = f"{r.name}#{k}"
+                k += 1
+            self._taken_rows.add(name)
+            self._row_names[r] = name
+        return name
+
+    # -- placement -------------------------------------------------------
+    def sharding_for(self, leaf):
+        """The NamedSharding this decomposition gives one array leaf:
+        ``shard_dim`` split over the mesh axis when divisible, replicated
+        otherwise.  Cached per (ndim, extent) — the replay hot loop asks
+        for every leaf of every op inside timed intervals."""
+        shape = getattr(leaf, "shape", ())
+        ndim = len(shape)
+        if not (ndim and -ndim <= self.shard_dim < ndim):
+            return self._replicated
+        ext = shape[self.shard_dim]
+        key = (ndim, ext)
+        sh = self._sharding_cache.get(key)
+        if sh is None:
+            sh = self._replicated
+            if ext >= self.n_devices and ext % self.n_devices == 0:
+                sh = shard_along(self.mesh, self.axis, ndim, self.shard_dim)
+            self._sharding_cache[key] = sh
+        return sh
+
+    def _place(self, x):
+        sh = self.sharding_for(x)
+        if isinstance(x, jax.Array) and x.sharding == sh:
+            return x
+        return jax.device_put(x, sh)
+
+    def _is_sharded(self, x) -> bool:
+        sh = self.sharding_for(x)
+        return sh is not self._replicated and isinstance(x, jax.Array) \
+            and x.sharding == sh
+
+    # -- staging (discrete node model) -----------------------------------
+    def _stage_scatter(self, leaves) -> Tuple[list, float, int, list]:
+        """Migrate operand leaves host -> N APUs: read each array out of
+        host memory and scatter it into a pooled sharded device buffer
+        (donation recycles the pool storage, paper C4 at node scale).
+        Returns (placed, seconds, bytes, acquired_buffers)."""
+        t0 = time.perf_counter()
+        placed, nbytes, acquired = [], 0, []
+        for x in leaves:
+            if not _is_array(x):
+                placed.append(x)
+                continue
+            h = np.asarray(x)                       # host page read / gather
+            sh = self.sharding_for(h)
+            dst = self._device_pool.acquire(h.shape, h.dtype, sharding=sh)
+            y = _copy_into(h, dst)                  # host -> APUs scatter
+            if y.sharding != sh:                    # pragma: no cover
+                y = jax.device_put(y, sh)
+            placed.append(y)
+            acquired.append(y)
+            nbytes += h.nbytes
+        jax.block_until_ready(acquired)
+        return placed, time.perf_counter() - t0, nbytes, acquired
+
+    # -- halo exchange ---------------------------------------------------
+    def _halo_region(self, r: Region) -> Optional[Region]:
+        """The explicit halo-exchange Region inserted before stencil region
+        ``r`` (cached per region).  Its fn is the bit-exact roll round-trip
+        identity whose partitioned form moves exactly the width-``w``
+        boundary planes across every shard boundary, both directions."""
+        cached = self._halo_regions.get(r)
+        if cached is not None:
+            return cached or None
+        w = halo_width(r.stencil, self.stencil_axis)
+        if w == 0:
+            self._halo_regions[r] = False
+            return None
+        dim = self.shard_dim
+
+        def exchange(x, _w=w, _dim=dim):
+            return jnp.roll(jnp.roll(x, _w, _dim), -_w, _dim)
+
+        halo = Region(name=f"halo({self._row_name(r)})", fn=exchange,
+                      offloaded=True, ledger=self._registry)
+        halo.halo_width = w
+        self._halo_regions[r] = halo
+        return halo
+
+    def _halo_leaf_indices(self, op) -> List[int]:
+        """Which operand leaves the halo exchange covers: the region's
+        declared ``halo_args`` (top-level positions/names), else every
+        array leaf."""
+        r = op.region
+        spec = getattr(r, "halo_args", None)
+        if spec is None:
+            return list(range(len(op.leaves)))
+        keys = set(spec)
+        for name in [k for k in keys if isinstance(k, str)]:
+            idx = r._param_index.get(name)
+            if idx is not None:
+                keys.add(idx)
+        return [i for i, k in enumerate(op.arg_keys) if k in keys]
+
+    def _exchange(self, op, placed) -> Tuple[list, float, int]:
+        """Run the halo-exchange region over the stencil-read operands.
+        Returns (leaves, wall seconds, per-device bytes sent)."""
+        halo = self._halo_region(op.region)
+        if halo is None:
+            return placed, 0.0, 0
+        w = halo.halo_width
+        idxs = [i for i in self._halo_leaf_indices(op)
+                if self._is_sharded(placed[i])]
+        if not idxs:
+            return placed, 0.0, 0
+        t0 = time.perf_counter()
+        out = list(placed)
+        bytes_per_dev = 0
+        for i in idxs:
+            x = placed[i]
+            out[i] = halo.jitted(x)
+            if self.n_devices > 1:
+                # each APU sends w boundary planes in each direction
+                plane = x.nbytes // x.shape[self.shard_dim]
+                bytes_per_dev += 2 * w * plane
+        jax.block_until_ready([out[i] for i in idxs])
+        return out, time.perf_counter() - t0, bytes_per_dev
+
+    # -- Executor protocol -----------------------------------------------
+    def run(self, target_region, *args, **kwargs):
+        """Single calls fall back to the synchronous inner executor (host
+        ledger); the decomposition only engages on whole programs."""
+        return self._inner.run(target_region, *args, **kwargs)
+
+    # -- program replay --------------------------------------------------
+    def replay_program(self, prog: RegionProgram, *inputs):
+        pol = self.policy
+        stager = pol.stager
+        staging = getattr(stager, "stages", False)
+        nd = self.n_devices
+        in_leaves = list(prog._input_leaves(inputs))
+        if not staging:
+            # unified node model: inputs scatter once and stay decomposed
+            in_leaves = [self._place(x) if _is_array(x) else x
+                         for x in in_leaves]
+        env: List[List[Any]] = []
+        resolve = _resolver(env, in_leaves)
+
+        def resolve_placed(d):
+            x = resolve(d)
+            if staging or not _is_array(x):
+                return x
+            if isinstance(d, Lit):     # constants: scatter once, ever
+                y = self._lit_cache.get(d)
+                if y is None:
+                    y = self._lit_cache[d] = self._place(x)
+                return y
+            return self._place(x)      # In/Ref leaves are already placed
+
+
+        for op in prog.ops:
+            r = op.region
+            raw = [resolve_placed(d) for d in op.leaves]
+            args, kwargs = jax.tree.unflatten(op.in_tree, raw)
+            n = r.size_fn(args, kwargs)
+            tgt = pol.router.target(r, args, kwargs, size=n)
+            if tgt == "host":
+                env.append(self._run_host(r, op, raw, n))
+                continue
+            staging_s, staging_b = 0.0, 0
+            acquired: list = []
+            if staging and r.offloaded:
+                raw, staging_s, staging_b, acquired = \
+                    self._stage_scatter(raw)
+            raw, exchange_s, exchange_bytes_dev = self._exchange(op, raw)
+            args, kwargs = jax.tree.unflatten(op.in_tree, raw)
+            t0 = time.perf_counter()
+            out = r.jitted(*args, **kwargs)
+            jax.block_until_ready(out)
+            compute_s = time.perf_counter() - t0
+            if staging and r.offloaded:
+                out, s, b = stager.stage_out(r, out, None)
+                staging_s += s
+                staging_b += b
+                for buf in acquired:          # staged operands are dead
+                    self._device_pool.release(buf)
+            else:
+                out = jax.tree.map(
+                    lambda x: self._place(x) if _is_array(x) else x, out)
+            halo = self._halo_region(r)
+            row = self._row_name(r)
+            for led in self.ledgers:
+                led.record(row, device=True, offloaded=r.offloaded,
+                           compute_s=compute_s / nd,
+                           staging_s=staging_s / nd,
+                           staging_bytes=staging_b // nd,
+                           elems=n // nd)
+                if halo is not None:
+                    led.record(halo.name, device=True, offloaded=True,
+                               compute_s=0.0,
+                               exchange_s=exchange_s / nd,
+                               exchange_bytes=exchange_bytes_dev)
+            env.append(jax.tree.leaves(out))
+        return jax.tree.unflatten(prog.out_tree,
+                                  [resolve(d) for d in prog.out_leaves])
+
+    def _run_host(self, r: Region, op, raw, n) -> list:
+        """Adaptive small-problem path: gather operands to the host, run
+        the host executable once, account on the node's host ledger."""
+        host = [np.asarray(x) if _is_array(x) else x for x in raw]
+        args, kwargs = jax.tree.unflatten(op.in_tree, host)
+        t0 = time.perf_counter()
+        out = r.executable("host")(*args, **kwargs)
+        jax.block_until_ready(out)
+        self.host_ledger.record(self._row_name(r), device=False,
+                                offloaded=r.offloaded,
+                                compute_s=time.perf_counter() - t0, elems=n)
+        return jax.tree.leaves(out)
+
+    # -- accounting ------------------------------------------------------
+    def reset_timings(self) -> None:
+        for led in (*self.ledgers, self.host_ledger):
+            led.reset_timings()
+
+    def _device_summary(self, i: int, led: Ledger) -> dict:
+        rows = list(led.regions.values())
+        return {
+            "device": i,
+            "calls": sum(r.calls for r in rows),
+            "compute_s": sum(r.compute_s for r in rows),
+            "staging_s": sum(r.staging_s for r in rows),
+            "exchange_s": sum(r.exchange_s for r in rows),
+            "staging_bytes": sum(r.staging_bytes for r in rows),
+            "exchange_bytes": sum(r.exchange_bytes for r in rows),
+            "elems": sum(r.host_elems + r.device_elems for r in rows),
+        }
+
+    def report(self) -> dict:
+        """Node-level coverage: the per-device ledgers summed (which, by
+        the 1/N-share recording convention, reproduces the measured wall
+        split exactly) plus host-routed calls, with a ``per_device``
+        compute/staging/exchange breakdown."""
+        node = Ledger.merged((*self.ledgers, self.host_ledger),
+                             name=self.mode)
+        rep = node.coverage_report()
+        rep["mode"] = self.mode
+        rep["devices"] = self.n_devices
+        rep["mesh_axis"] = self.axis
+        rep["per_device"] = [self._device_summary(i, led)
+                             for i, led in enumerate(self.ledgers)]
+        return rep
+
+
+class ShardedProgram:
+    """A captured program bound to its multi-APU executor: ``replay`` runs
+    the decomposed trace, ``replay_batch`` scatters N independent instances
+    across the APUs (data parallelism over the mesh axis), and
+    ``coverage_report`` is the aggregated node view."""
+
+    def __init__(self, prog: RegionProgram, executor: ShardExecutor):
+        self.prog = prog
+        self.executor = executor
+
+    @property
+    def mesh(self):
+        return self.executor.mesh
+
+    @property
+    def ledgers(self) -> List[Ledger]:
+        return self.executor.ledgers
+
+    def replay(self, *inputs):
+        return self.prog.replay(self.executor, *inputs)
+
+    # the Executor protocol, so a ShardedProgram itself drops in where an
+    # executor is expected (SimpleFoam.replay_steps, benchmarks)
+    def replay_program(self, prog: RegionProgram, *inputs):
+        return self.executor.replay_program(prog, *inputs)
+
+    def run(self, target_region, *args, **kwargs):
+        return self.executor.run(target_region, *args, **kwargs)
+
+    def replay_batch(self, *stacked_inputs, in_axes=0):
+        """Replay N stacked independent instances with the batch dimension
+        scattered over the mesh axis — each simulated APU decodes its own
+        slice of the requests (the ``serve --mesh`` path)."""
+        ex = self.executor
+        mesh, axis, nd = ex.mesh, ex.axis, ex.n_devices
+
+        def scatter(x):
+            if not _is_array(x) or not getattr(x, "ndim", 0):
+                return x
+            sh = shard_along(mesh, axis, x.ndim, 0) \
+                if x.shape[0] % nd == 0 else replicated_sharding(mesh)
+            return jax.device_put(x, sh)
+
+        placed = jax.tree.map(scatter, stacked_inputs)
+        t0 = time.perf_counter()
+        out = self.prog.replay_batch(*placed, in_axes=in_axes)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        sizes = [int(a.size) for a in jax.tree.leaves(stacked_inputs)
+                 if hasattr(a, "size")]
+        for led in ex.ledgers:
+            led.record(f"{self.prog.name}[batch]", device=True,
+                       offloaded=True, compute_s=dt / nd,
+                       elems=max(sizes, default=0) // nd)
+        return out
+
+    def coverage_report(self) -> dict:
+        return self.executor.report()
+
+    def report(self) -> dict:
+        return self.executor.report()
+
+    def reset_timings(self) -> None:
+        self.executor.reset_timings()
+
+    def summary(self) -> str:
+        ex = self.executor
+        halos = sum(1 for op in self.prog.ops
+                    if halo_width(op.region.stencil, ex.stencil_axis))
+        return (f"ShardedProgram({self.prog.name!r}: {len(self.prog)} ops, "
+                f"{ex.n_devices}x{ex.axis!r} decomposition on dim "
+                f"{ex.shard_dim}, {halos} halo-exchanged ops, "
+                f"policy={ex.policy.name})")
+
+
+def shard_program(prog: RegionProgram, mesh,
+                  policy: Optional[ExecutionPolicy] = None, *,
+                  axis: str = "apu", shard_dim: int = -1,
+                  stencil_axis: Optional[int] = None) -> ShardedProgram:
+    """Bind a captured program to a 1-D mesh of simulated APUs.
+
+        mesh = make_apu_mesh(4)          # repro.launch.mesh
+        sp = shard_program(prog, mesh, DiscretePolicy())
+        out = sp.replay(*inputs)
+        sp.coverage_report()["per_device"]     # compute/staging/exchange
+    """
+    return ShardedProgram(prog, ShardExecutor(
+        policy, mesh, axis=axis, shard_dim=shard_dim,
+        stencil_axis=stencil_axis))

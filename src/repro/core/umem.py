@@ -85,6 +85,24 @@ def place_like(tree, shardings):
     return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
 
 
+def shard_along(mesh, axis_name: str, ndim: int, dim: int):
+    """NamedSharding splitting array dimension ``dim`` (negative indices
+    allowed) of an ``ndim``-rank array over mesh axis ``axis_name``, all
+    other dimensions replicated — the one-axis domain decomposition of the
+    multi-APU replay (``repro.core.shard_program``)."""
+    dim = dim % ndim if ndim else 0
+    spec = [None] * ndim
+    if ndim:
+        spec[dim] = axis_name
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(*spec))
+
+
+def replicated_sharding(mesh):
+    """NamedSharding replicating an array across every mesh device."""
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
 def space_of(x) -> Optional[str]:
     try:
         return x.sharding.memory_kind

@@ -1,9 +1,11 @@
 """Production mesh construction.
 
 A function (not a module-level constant) so importing this module never
-touches jax device state. The dry-run process sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
-import; smoke tests and benchmarks see the real single device.
+touches jax device state. Processes that need many devices set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before any jax
+import — 512 for the dry-run sweep, the APU count for the multi-APU
+scaling driver (``repro.launch.scaling``, see docs/SCALING.md); smoke
+tests and in-process benchmarks see the real single device.
 
 Mesh topology (TPU v5e pods):
   single-pod : (16, 16)      axes ("data", "model")   = 256 chips
@@ -31,5 +33,37 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
-    """1x1 mesh over the single real device — used by sharding unit tests."""
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:1])
+    """Small mesh over the first prod(shape) devices (default 1x1 over the
+    single real device — sharding unit tests).  ``serve --mesh N`` builds
+    an (N, 1) smoke mesh over the simulated APUs so the model's internal
+    sharding constraints share a device assignment with the APU mesh."""
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for smoke mesh {shape}, have {len(devices)}; "
+            f"set XLA_FLAGS={apu_flags(n)} before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def apu_flags(n_apus: int) -> str:
+    """The XLA flag that simulates an ``n_apus``-APU node on a CPU host.
+    Must be in ``XLA_FLAGS`` *before* the first jax import (subprocess
+    drivers like ``repro.launch.scaling`` set it; shells export it)."""
+    return f"--xla_force_host_platform_device_count={n_apus}"
+
+
+def make_apu_mesh(n_apus: int = 1, axis: str = "apu"):
+    """1-D mesh of ``n_apus`` simulated APUs — the node topology of the
+    multi-APU replay (``repro.core.shard_program``).  Each "APU" is one
+    forced host-platform device; the Infinity Fabric between them is the
+    inter-device transfer path XLA partitions collectives onto."""
+    devices = jax.devices()
+    if len(devices) < n_apus:
+        raise RuntimeError(
+            f"need {n_apus} devices for a {n_apus}-APU mesh, have "
+            f"{len(devices)}; set XLA_FLAGS={apu_flags(n_apus)} before "
+            "importing jax (see docs/SCALING.md)")
+    return jax.make_mesh((n_apus,), (axis,), devices=devices[:n_apus])

@@ -1,0 +1,131 @@
+"""Multi-APU scaling driver: one decomposed cavity replay per node size.
+
+Runs the `fig_scaling` measurement for ONE simulated node size: capture a
+SIMPLE time-step, replay it on a single device and domain-decomposed
+across ``--apus`` simulated APUs (``repro.core.shard_program``), assert
+numerical parity (docs/DESIGN.md §2 tolerance), and report the node-level
+compute / staging / inter-APU-exchange split from the aggregated
+per-device ledgers.
+
+Each invocation must own its process: the APU count is baked into
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the first
+jax import (the ``launch.dryrun`` trick), so the benchmark harness
+(``benchmarks/run.py fig_scaling``) runs this module once per node size in
+a subprocess:
+
+  PYTHONPATH=src python -m repro.launch.scaling --apus 4 --steps 2 \\
+      --grid 8,8,8 --policy unified --out artifacts/scaling/apu4.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--apus", type=int, default=2,
+                    help="simulated APUs (forced host-platform devices)")
+    ap.add_argument("--steps", type=int, default=2,
+                    help="replayed time-steps per measurement")
+    ap.add_argument("--grid", default="8,8,8",
+                    help="cavity grid; z must divide by --apus")
+    ap.add_argument("--policy", default="unified",
+                    choices=("unified", "discrete", "host", "adaptive"))
+    ap.add_argument("--inner-max", type=int, default=6)
+    ap.add_argument("--out", default="", help="also write the JSON here")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> dict:
+    args = parse_args(argv)
+    if "jax" not in sys.modules:
+        # mesh.apu_flags spells the same flag, but importing repro.launch
+        # .mesh would itself import jax — too late to set flags after that.
+        # Ours goes LAST: with repeated absl flags the last occurrence
+        # wins, so an inherited device-count pin cannot override the run.
+        flag = f"--xla_force_host_platform_device_count={args.apus}"
+        os.environ["XLA_FLAGS"] = " ".join(
+            [os.environ.get("XLA_FLAGS", ""), flag]).strip()
+    import jax
+    import numpy as np
+
+    if jax.device_count() < args.apus:
+        raise SystemExit(
+            f"jax sees {jax.device_count()} device(s) but --apus="
+            f"{args.apus}; run this module in a fresh process (it sets "
+            "XLA_FLAGS itself) or export XLA_FLAGS first")
+
+    from repro.cfd.grid import Grid
+    from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
+    from repro.core.regions import Executor, make_policy
+    from repro.core.shard_program import shard_program
+    from repro.launch.mesh import make_apu_mesh
+
+    grid = tuple(int(g) for g in args.grid.split(","))
+    if grid[-1] % args.apus:
+        raise SystemExit(f"grid z extent {grid[-1]} does not divide over "
+                         f"{args.apus} APUs")
+    cfg = SimpleConfig(grid=Grid(grid), nu=0.1, inner_max=args.inner_max)
+    app = SimpleFoam(cfg)
+    st = init_state(cfg)
+    st, _, _ = app.run_steps(st, 1)          # develop flow + warm caches
+    prog = app.capture_step(st)
+
+    # single-device reference replay of the same trace
+    ref = Executor(make_policy(args.policy))
+    app.replay_steps(prog, st, 1, ref)       # warm per-sharding compiles
+    ref.ledger.reset_timings()
+    s_ref, fom_ref = app.replay_steps(prog, st, args.steps, ref)
+
+    # decomposed replay across the simulated node
+    mesh = make_apu_mesh(args.apus)
+    sp = shard_program(prog, mesh, make_policy(args.policy))
+    app.replay_steps(prog, st, 1, sp)        # warm sharded compiles
+    sp.reset_timings()
+    s_sh, fom_sh = app.replay_steps(prog, st, args.steps, sp)
+
+    fields = zip((s_ref.u, s_ref.v, s_ref.w, s_ref.p),
+                 (s_sh.u, s_sh.v, s_sh.w, s_sh.p))
+    max_err = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                  for a, b in fields)
+    scale = max(float(np.max(np.abs(np.asarray(f))))
+                for f in (s_ref.u, s_ref.v, s_ref.w, s_ref.p))
+    # docs/DESIGN.md §2: float32 replay parity tolerance
+    tol = 1e-5 * max(scale, 1.0)
+    rep = sp.coverage_report()
+    rec = {
+        "apus": args.apus,
+        "grid": list(grid),
+        "steps": args.steps,
+        "policy": args.policy,
+        "ops": len(prog),
+        "fom_single_s": fom_ref,
+        "fom_sharded_s": fom_sh,
+        "parity_max_abs_err": max_err,
+        "parity_tol": tol,
+        "parity_ok": bool(max_err <= tol),
+        "halo_rows": sorted(n for n in sp.ledgers[0].regions
+                            if n.startswith("halo(")),
+        "report": rep,
+    }
+    if not rec["parity_ok"]:
+        rec["status"] = "parity_failure"
+    else:
+        rec["status"] = "ok"
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(rec, indent=1, default=str))
+    print(json.dumps({k: v for k, v in rec.items() if k != "report"},
+                     indent=1, default=str))
+    if not rec["parity_ok"]:
+        raise SystemExit(2)
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -108,10 +108,17 @@ def capture_decode_program(cfg, mesh, params, prompt_len: int, gen: int,
 
 
 def replay_batch_demo(cfg, mesh, prefill, make_cache, params, args,
-                      n_requests: int):
+                      n_requests: int, apu_mesh_size: int = 0):
     """The "heavy traffic" path: capture one request group's decode loop,
     then push N independent request groups through it as ONE vmapped
-    program (``RegionProgram.replay_batch``)."""
+    program (``RegionProgram.replay_batch``).
+
+    ``apu_mesh_size`` > 0 additionally scatters the stacked request groups
+    across a 1-D mesh of simulated APUs (``repro.core.shard_program``):
+    each APU decodes its slice of the requests through the same compiled
+    composite, with per-device ledgers aggregated in the printed report.
+    Needs ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` exported
+    before launch (see docs/SCALING.md)."""
     key0 = jax.random.PRNGKey(args.seed)
     toks, caches = [], []
     for r in range(n_requests):
@@ -129,8 +136,20 @@ def replay_batch_demo(cfg, mesh, prefill, make_cache, params, args,
                                   ledger=ex.ledger)
     stacked_tok = jnp.stack(toks)
     stacked_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    sharded = None
+    if apu_mesh_size:
+        from repro.core.shard_program import shard_program
+        from repro.launch.mesh import make_apu_mesh
+        if n_requests % apu_mesh_size:
+            raise SystemExit(f"--replay-batch {n_requests} does not divide "
+                             f"over --mesh {apu_mesh_size} APUs")
+        sharded = shard_program(prog, make_apu_mesh(apu_mesh_size),
+                                UnifiedPolicy(), shard_dim=0)
     t0 = time.time()
-    out = prog.replay_batch(stacked_tok, stacked_cache, executor=ex)
+    if sharded is not None:
+        out = sharded.replay_batch(stacked_tok, stacked_cache)
+    else:
+        out = prog.replay_batch(stacked_tok, stacked_cache, executor=ex)
     dt = time.time() - t0
     seqs = np.asarray(jnp.stack(out, axis=-1))        # (N, B, gen)
     assert np.isfinite(seqs).all()
@@ -140,10 +159,18 @@ def replay_batch_demo(cfg, mesh, prefill, make_cache, params, args,
                                 axis=-1))
     agree = float((seqs[0] == solo).mean())
     total = n_requests * args.batch * args.gen
+    shard_note = ""
+    if sharded is not None:
+        rep = sharded.coverage_report()
+        # NB: no exchange figure here — the batched path scatters whole
+        # independent requests, so there is no halo traffic to model
+        shard_note = (f"; sharded over {rep['devices']} APUs "
+                      f"({n_requests // rep['devices']} request groups "
+                      f"each)")
     print(f"[serve] replay_batch: {n_requests} request groups x "
           f"{args.batch}x{args.gen} tokens = {total} tokens in "
           f"{dt*1e3:.1f} ms ({total/max(dt,1e-9):.0f} tok/s); "
-          f"solo-replay agreement {agree:.3f}")
+          f"solo-replay agreement {agree:.3f}{shard_note}")
     return seqs
 
 
@@ -172,12 +199,22 @@ def main(argv=None):
                     help="also capture the decode loop as a RegionProgram "
                          "and replay it over N stacked request groups "
                          "(repro.core.program heavy-traffic path)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="scatter the --replay-batch request groups over a "
+                         "mesh of N simulated APUs (shard_program); export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N before launch, see docs/SCALING.md")
     args = ap.parse_args(argv)
+    if args.mesh and not args.replay_batch:
+        raise SystemExit("--mesh requires --replay-batch N (it shards the "
+                         "batched decode program)")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = make_reduced(cfg)
-    mesh = make_smoke_mesh()
+    # with --mesh N the model mesh spans the same N simulated APUs as the
+    # shard_program mesh — one jit cannot mix two device assignments
+    mesh = make_smoke_mesh((args.mesh, 1)) if args.mesh else make_smoke_mesh()
     max_len = args.prompt_len + args.gen
     prefill, decode, make_cache = build_server(
         cfg, mesh, args.batch, max_len, offload_kv=args.offload_kv)
@@ -214,7 +251,7 @@ def main(argv=None):
     assert np.isfinite(seq).all()
     if args.replay_batch:
         replay_batch_demo(cfg, mesh, prefill, make_cache, params, args,
-                          args.replay_batch)
+                          args.replay_batch, apu_mesh_size=args.mesh)
     return seq
 
 

@@ -6,8 +6,9 @@ import jax
 import numpy as np
 import pytest
 
-# Smoke tests and benches must see ONE device (the dry-run subprocesses set
-# their own XLA_FLAGS) — assert that contract instead of setting flags here.
+# Smoke tests and benches must see ONE device — the dry-run and multi-APU
+# scaling subprocesses (repro.launch.{dryrun,scaling}) set their own
+# XLA_FLAGS before their jax import; never set device-count flags here.
 
 # ---------------------------------------------------------------------------
 # hypothesis skip-guard: when hypothesis is not installed, property tests
