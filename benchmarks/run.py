@@ -176,6 +176,91 @@ def fig_scaling(steps: int = 2, grid="8,8,8", policy="unified"):
     return apus
 
 
+def fig_variants(steps: int = 2, grid=(12, 12, 12),
+                 out_json="artifacts/variants/autotune_winners.json"):
+    """Beyond-paper variants figure: the captured SIMPLE step replayed
+    under StaticSelector('ref'), StaticSelector('pallas'), and a
+    calibrated AutotuneSelector, per policy (repro.core.regions Selector
+    axis — the 'which implementation' half of the paper's one-directive
+    claim).  Asserts DESIGN §2 parity across selectors, prints the
+    impl_counts proving which variant ran where, and writes the autotune
+    winners JSON next to the CSV.  On a CPU container the Pallas kernels
+    run in interpret mode, so the FOM here is the dispatch/accounting
+    structure and the measured per-cell winners, not kernel wall-clock.
+    Calibration grid edges override via FIG_VARIANTS_SIZES=8,12."""
+    import os
+    from repro.cfd import fvm
+    from repro.cfd.grid import Grid
+    from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
+    from repro.core.regions import (AutotuneSelector, Executor,
+                                    StaticSelector, make_policy)
+    edges = [int(x) for x in
+             os.environ.get("FIG_VARIANTS_SIZES", "8,12,16").split(",") if x]
+    cfg = SimpleConfig(grid=Grid(grid), nu=0.1, inner_max=10)
+    app = SimpleFoam(cfg)
+    st = init_state(cfg)
+    st, _, _ = app.run_steps(st, 1)
+    prog = app.capture_step(st)
+
+    # calibrate the solver hot-spot regions over a grid-edge ladder
+    auto = AutotuneSelector()
+    sizes_cells = []
+    for m in edges:
+        g = Grid((m, m, m))
+        A, _ = fvm.laplacian(g, 1.0)
+        x = jnp.ones(g.shape, jnp.float32)
+        red, _ = g.red_black_masks()
+        from repro.cfd.precond import rb_dilu_factor
+        P = rb_dilu_factor(A, red)
+        # both routing targets: UnifiedPolicy routes offloaded regions to
+        # "default", DiscretePolicy to "device" — winners are per-target
+        # cells, so calibrating only one would leave the other on ref
+        auto.calibrate(app.solver_regions.amul,
+                       lambda n, A=A, x=x: (A.diag, A.off, x),
+                       sizes=(g.n,), targets=("default", "device"), reps=3)
+        auto.calibrate(app.solver_regions.precond,
+                       lambda n, P=P, A=A, x=x: (P.rdiag, P.red, A.off, x),
+                       sizes=(g.n,), targets=("default", "device"), reps=3)
+        sizes_cells.append(g.n)
+    winners = {f"{rn}|{tgt}|2^{b}": win
+               for (rn, tgt, b), win in sorted(auto.winners.items())}
+
+    selectors = (("ref", StaticSelector("ref")),
+                 ("pallas", StaticSelector("pallas")),
+                 ("autotuned", auto))
+    base = {}
+    for pol_name in ("unified", "discrete"):
+        for sel_name, sel in selectors:
+            pol = make_policy(pol_name)
+            pol.selector = sel
+            ex = Executor(pol)
+            app.replay_steps(prog, st, 1, ex)          # warm compiles
+            ex.ledger.reset_timings()
+            s, fom = app.replay_steps(prog, st, steps, ex)
+            fields = [np.asarray(f) for f in (s.u, s.v, s.w, s.p)]
+            ref_fields = base.setdefault(pol_name, fields)
+            scale = max(np.max(np.abs(f)) for f in ref_fields)
+            err = max(np.max(np.abs(a - b))
+                      for a, b in zip(fields, ref_fields))
+            assert err <= 1e-5 * max(1.0, scale), \
+                (pol_name, sel_name, err)              # DESIGN §2 parity
+            counts = ex.report()["impl_counts"]
+            # calibration persisted on the app ledger's region rows
+            wins = app.ledger.coverage_report()["variant_wins"]
+            row(f"fig_variants/{pol_name}_{sel_name}", fom * 1e6,
+                f"impl_counts={'+'.join(f'{k}:{v}' for k, v in sorted(counts.items()))}"
+                f";parity_max_err={err:.2e}"
+                f";variant_wins={'+'.join(f'{k}:{v}' for k, v in sorted(wins.items()))}")
+    out = Path(out_json)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(
+        {"calibration_grid_edges": edges, "calibration_sizes": sizes_cells,
+         "winners": winners,
+         "bucket_model": "b covers sizes in [2^(b-1), 2^b)"}, indent=1))
+    print(f"[bench] wrote autotune winners to {out}", flush=True)
+    return winners
+
+
 def fig4_coverage(grid=(12, 12, 12)):
     """Paper Figs 2 vs 4: offload coverage, PETSc-interface mode (assembly
     on host, solver offloaded) vs full directive mode."""
@@ -335,6 +420,7 @@ BENCHES = {
     "fig6_migration": fig6_migration,
     "fig6b_overlap": fig6b_overlap,
     "fig_scaling": fig_scaling,
+    "fig_variants": fig_variants,
     "fig4_coverage": fig4_coverage,
     "pool": pool_bench,
     "dispatch": dispatch_bench,

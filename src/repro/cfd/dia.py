@@ -6,8 +6,10 @@ are stored per cell: ``diag [nx,ny,nz]`` and ``off [6, nx,ny,nz]`` where
 ``off[f]`` multiplies the neighbor in ``grid.NEIGHBORS[f]``; entries for
 non-existent (boundary) neighbors are zero.
 
-``repro.kernels.stencil_spmv`` provides the Pallas kernel for ``amul``;
-``amul_ref`` here is the jnp oracle (and the default implementation).
+``amul_ref`` is the jnp oracle and the *ref* variant of the module-level
+:data:`AMUL` region; ``repro.kernels.stencil_spmv`` registers as its
+``pallas`` variant.  Which one runs is decided per call by the executing
+policy's Selector (docs/VARIANTS.md) — nothing here hard-wires the kernel.
 """
 from __future__ import annotations
 
@@ -18,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cfd.grid import Grid, NEIGHBORS, shift
+from repro.core.regions import region
 
 #: the DIA offset table in (grid_axis, offset) form — one entry per stored
 #: band.  This is the canonical stencil declaration consumed by sharded
@@ -76,11 +79,30 @@ def amul_ref(A: DiaMatrix, x: jax.Array) -> jax.Array:
     return y
 
 
-def amul(A: DiaMatrix, x: jax.Array, use_kernel: bool = False) -> jax.Array:
-    if use_kernel:
-        from repro.kernels.stencil_spmv import ops as K
-        return K.stencil_spmv(A.diag, A.off, x)
-    return amul_ref(A, x)
+@region("Amul(dia)", stencil=STENCIL_OFFSETS, halo_args=("x",))
+def AMUL(diag, off, x):
+    """The canonical DIA SpMV region: ``ref`` is the 7-FMA oracle, the
+    Pallas kernel registers below as ``pallas``.  Solver factories
+    (``repro.cfd.solvers.make_solver_regions``) build their own per-app
+    Amul regions with the same variant table."""
+    return amul_ref(DiaMatrix(diag, off), x)
+
+
+@AMUL.variant("pallas")
+def amul_pallas(diag, off, x):
+    """The ONE lazy wrapper around the stencil-SpMV kernel — per-app Amul
+    regions (``solvers.make_solver_regions``) register this same callable.
+    Imported at trace time, not module import: the kernel layer stays an
+    optional dependency of the variant, not of the CFD core."""
+    from repro.kernels.stencil_spmv import kernel as K
+    return K.stencil_spmv(diag, off, x)
+
+
+def amul(A: DiaMatrix, x: jax.Array, impl: str = "ref") -> jax.Array:
+    """Variant-dispatched y = A x for direct (non-executor) callers.
+    ``impl`` names a registered variant of :data:`AMUL`; executor-driven
+    code should instead let the policy's Selector decide."""
+    return AMUL.impl_fn(AMUL.resolve(impl))(A.diag, A.off, x)
 
 
 def residual(A: DiaMatrix, x, b):

@@ -4,8 +4,10 @@ listing 4).
 OpenFOAM expands field expressions through macros into elementwise loops;
 the paper offloads each with one directive, and those loops fire hundreds of
 times per time-step (Fig 3). Here each macro is a region-decorated jitted
-function (so the executors can stage/measure them), and the ternary fused
-forms map onto the ``repro.kernels.fused_field`` Pallas kernel.
+function (so the executors can stage/measure them); the fused forms from
+``repro.kernels.fused_field`` register as each region's ``pallas`` variant,
+selected per call by the executing policy (docs/VARIANTS.md) — no
+hard-wired kernel flag.
 """
 from __future__ import annotations
 
@@ -16,7 +18,30 @@ from repro.core.ledger import Ledger
 from repro.core.regions import region
 
 
-def make_field_ops(ledger: Ledger = None, use_kernel: bool = False):
+# -- the canonical lazy kernel wrappers: defined ONCE, registered on every
+# -- factory's regions (and reused by solvers.make_solver_regions)
+
+def fused_axpy_pallas(a, x, y):
+    from repro.kernels.fused_field import kernel as K
+    return K.fused_axpy(a, x, y)
+
+
+def fused_xpay_pallas(a, x, y):
+    from repro.kernels.fused_field import kernel as K
+    return K.fused_xpay(a, x, y)
+
+
+def fused_axpbypz_pallas(a, x, b, y, z):
+    from repro.kernels.fused_field import kernel as K
+    return K.fused_axpbypz(a, x, b, y, z)
+
+
+def fused_mul_pallas(x, y):
+    from repro.kernels.fused_field import kernel as K
+    return K.fused_mul(x, y)
+
+
+def make_field_ops(ledger: Ledger = None):
     """Region-decorated field macros (one ledger per app instance).
 
     A fresh Ledger per call when none is given: repeated factory calls
@@ -24,33 +49,32 @@ def make_field_ops(ledger: Ledger = None, use_kernel: bool = False):
     (dot#2, dot#3, ...) without bound."""
     kw = dict(ledger=ledger or Ledger("field_ops"))
 
-    if use_kernel:
-        from repro.kernels.fused_field import ops as K
-
     @region("F_OP_F_OP_F(axpy)", **kw)
     def axpy(a, x, y):
         """y + a*x — the daxpy of listing 2."""
-        if use_kernel:
-            return K.fused_axpy(a, x, y)
         return y + a * x
+
+    axpy.variant("pallas", fused_axpy_pallas)
 
     @region("F_OP_F_OP_F(xpay)", **kw)
     def xpay(a, x, y):
         """x + a*y (PBiCGStab's p-update shape)."""
-        if use_kernel:
-            return K.fused_xpay(a, x, y)
         return x + a * y
+
+    xpay.variant("pallas", fused_xpay_pallas)
 
     @region("F_OP_F_OP_F(axpbypz)", **kw)
     def axpbypz(a, x, b, y, z):
         """z + a*x + b*y (momentum corrector shape, listing 3 line 32)."""
         return z + a * x + b * y
 
+    axpbypz.variant("pallas", fused_axpbypz_pallas)
+
     @region("F_MUL_F", **kw)
     def fmul(x, y):
-        if use_kernel:
-            return K.fused_mul(x, y)
         return x * y
+
+    fmul.variant("pallas", fused_mul_pallas)
 
     @region("dot", **kw)
     def dot(x, y):

@@ -19,8 +19,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.cfd.dia import DiaMatrix
+from repro.cfd.dia import DiaMatrix, STENCIL_OFFSETS, compose_offsets
 from repro.cfd.grid import Grid, NEIGHBORS, shift
+from repro.core.regions import region
 
 
 @jax.tree_util.register_pytree_node_class
@@ -63,19 +64,41 @@ def rb_dilu_factor(A: DiaMatrix, red) -> RBDilu:
     return RBDilu(rdiag=rdiag, red=red)
 
 
-def rb_dilu_apply(P: RBDilu, A: DiaMatrix, r, use_kernel: bool = False):
-    """w = M^-1 r with M = (L+D*) D*^-1 (D*+U) in red-black ordering."""
-    if use_kernel:
-        from repro.kernels.stencil_spmv import ops as K
-        return K.rb_dilu_apply(P.rdiag, P.red, A.off, r)
-    red = P.red
+def _rb_dilu_ref(rdiag, red, off, r):
+    """w = M^-1 r with M = (L+D*) D*^-1 (D*+U) in red-black ordering
+    (pure-jnp oracle; the ``ref`` variant of :data:`RB_DILU`)."""
     # forward: reds first (no lower neighbors), then blacks
-    y_r = jnp.where(red, r * P.rdiag, 0.0)
-    y_b = jnp.where(red, 0.0, (r - _neighbor_sum(A.off, y_r)) * P.rdiag)
-    y = y_r + y_b
+    y_r = jnp.where(red, r * rdiag, 0.0)
+    y_b = jnp.where(red, 0.0, (r - _neighbor_sum(off, y_r)) * rdiag)
     # backward: blacks unchanged, reds corrected by upper (black) neighbors
-    z_r = jnp.where(red, y_r - P.rdiag * _neighbor_sum(A.off, y_b), 0.0)
+    z_r = jnp.where(red, y_r - rdiag * _neighbor_sum(off, y_b), 0.0)
     return jnp.where(red, z_r, y_b)
+
+
+# the two half-sweeps chain (black reads updated red): composed reach 2
+@region("rb_dilu(dia)",
+        stencil=compose_offsets(STENCIL_OFFSETS, STENCIL_OFFSETS),
+        halo_args=("r",))
+def RB_DILU(rdiag, red, off, r):
+    """The canonical red-black DILU apply region; the Pallas half-sweep
+    kernels register below as its ``pallas`` variant."""
+    return _rb_dilu_ref(rdiag, red, off, r)
+
+
+@RB_DILU.variant("pallas")
+def rb_dilu_pallas(rdiag, red, off, r):
+    """The ONE lazy wrapper around the half-sweep kernel composition
+    (defined in the kernel package) — per-app DILU regions register this
+    same callable."""
+    from repro.kernels.stencil_spmv import kernel as K
+    return K.rb_dilu(rdiag, red, off, r)
+
+
+def rb_dilu_apply(P: RBDilu, A: DiaMatrix, r, impl: str = "ref"):
+    """Variant-dispatched preconditioner apply for direct callers; ``impl``
+    names a registered variant of :data:`RB_DILU` (executor-driven code
+    lets the policy's Selector decide instead)."""
+    return RB_DILU.impl_fn(RB_DILU.resolve(impl))(P.rdiag, P.red, A.off, r)
 
 
 def jacobi_apply(A: DiaMatrix, r):

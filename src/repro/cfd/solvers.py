@@ -21,9 +21,11 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.cfd.dia import (DiaMatrix, STENCIL_OFFSETS, amul_ref,
-                           compose_offsets)
-from repro.cfd.precond import RBDilu, jacobi_apply, rb_dilu_apply, rb_dilu_factor
+from repro.cfd.dia import (DiaMatrix, STENCIL_OFFSETS, amul_pallas,
+                           amul_ref, compose_offsets)
+from repro.cfd.fields import fused_axpy_pallas, fused_axpbypz_pallas
+from repro.cfd.precond import (RBDilu, jacobi_apply, rb_dilu_apply,
+                               rb_dilu_factor, rb_dilu_pallas)
 from repro.core.ledger import Ledger
 from repro.core.regions import region
 
@@ -51,9 +53,13 @@ def make_solver_regions(ledger: Optional[Ledger] = None):
     # stencil declarations feed sharded replay (repro.core.shard_program):
     # halo width along the decomposed grid axis is inferred from the DIA
     # offsets; halo_args names the operands whose neighbors are read
+    # pallas variants reuse the canonical lazy wrappers from dia / precond
+    # / fields — one definition per kernel composition, many registrations
     @region("Amul", stencil=STENCIL_OFFSETS, halo_args=("x",), **kw)
     def amul_r(diag, off, x):
         return amul_ref(DiaMatrix(diag, off), x)
+
+    amul_r.variant("pallas", amul_pallas)
 
     # the two half-sweeps chain (black reads updated red reads r): reach 2
     @region("precondition(DILU)",
@@ -62,13 +68,24 @@ def make_solver_regions(ledger: Optional[Ledger] = None):
     def precond_r(rdiag, red, off, r):
         return rb_dilu_apply(RBDilu(rdiag, red), DiaMatrix(rdiag * 0, off), r)
 
+    precond_r.variant("pallas", rb_dilu_pallas)
+
     @region("sA=rA-alpha*AyA", **kw)
     def saxpy_r(a, x, y):
         return y - a * x
 
+    @saxpy_r.variant("pallas")
+    def _saxpy_k(a, x, y):
+        # y - a*x is fused_axpy with the scale negated (exact)
+        return fused_axpy_pallas(-a, x, y)
+
     @region("x+=a*yA+w*zA", **kw)
     def update_x_r(x, a, yA, w, zA):
         return x + a * yA + w * zA
+
+    @update_x_r.variant("pallas")
+    def _update_x_k(x, a, yA, w, zA):
+        return fused_axpbypz_pallas(a, yA, w, zA, x)
 
     @region("p=r+beta*(p-w*v)", **kw)
     def update_p_r(r, beta, p, w, v):

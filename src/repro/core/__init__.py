@@ -6,8 +6,9 @@ C3 adaptive switch -> repro.core.regions    (SizeRouter / AdaptivePolicy)
 C4 memory pooling  -> repro.core.pool       (HostStagingPool, DeviceBufferPool)
 §5 measurement     -> repro.core.regions    (Unified/Discrete/Host policies)
 
-``repro.core.regions`` is the canonical API: Region + ExecutionPolicy
-(placement x routing x staging) run by one Executor.  ``executors`` and
+``repro.core.regions`` is the canonical API: Region (with named
+implementation variants, OpenMP ``declare variant``) + ExecutionPolicy
+(placement x routing x staging x selection) run by one Executor.  ``executors`` and
 ``dispatch`` re-export deprecated shims over it.  ``repro.core.program``
 layers captured region programs on top: record one step, replay it under
 any policy with lookahead staging overlap (AsyncExecutor) or vmapped over
@@ -25,11 +26,14 @@ from repro.core.pool import (BufferRotation, DeviceBufferPool,
 from repro.core.program import AsyncExecutor, RegionProgram, capture
 from repro.core.shard_program import (ShardExecutor, ShardedProgram,
                                       halo_width, shard_program)
-from repro.core.regions import (DEFAULT_CUTOFF, AdaptivePolicy, ComposedPolicy,
-                                DiscretePolicy, ExecutionPolicy, Executor,
-                                HostPolicy, MigrationStager, NullStager,
-                                Placer, Region, SizeRouter, StaticRouter,
-                                UnifiedPolicy, as_region, default_size,
-                                make_policy, region)
+from repro.core.regions import (DEFAULT_CUTOFF, DEFAULT_SELECTOR,
+                                AdaptivePolicy, AutotuneSelector,
+                                ComposedPolicy, DiscretePolicy,
+                                ExecutionPolicy, Executor, HostPolicy,
+                                MigrationStager, NullStager, Placer, Region,
+                                Selector, SizeRouter, StaticRouter,
+                                StaticSelector, TargetSelector, UnifiedPolicy,
+                                as_region, default_size, make_policy,
+                                policy_selector, region, size_bucket)
 from repro.core.umem import (MemSpace, UnifiedArena, place, place_like,
                              preferred_host_space, tree_place)

@@ -15,6 +15,12 @@ import time
 from typing import Dict, List, Optional
 
 
+def variant_cell(target: str, bucket: int) -> str:
+    """Key of one autotune calibration cell: routing target x size bucket
+    (power-of-two: bucket ``b`` covers sizes in ``[2^(b-1), 2^b)``)."""
+    return f"{target}@2^{bucket}"
+
+
 @dataclasses.dataclass
 class RegionRecord:
     name: str
@@ -34,6 +40,21 @@ class RegionRecord:
     host_elems: int = 0                 # routing accounting (was DispatchStats)
     device_elems: int = 0
     cutoff: Optional[int] = None        # calibrated TARGET_CUT_OFF, if any
+    #: calls per selected implementation variant ("ref", "pallas", ...) —
+    #: the declare-variant dispatch record of paper C3's second half
+    impl_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: autotune winners per (target, size-bucket) cell (see variant_cell);
+    #: persisted like ``cutoff`` — survives reset_timings()
+    calibrated_variants: Dict[str, str] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def impl(self) -> Optional[str]:
+        """The dominant implementation this row ran (most calls), or None
+        before any variant-resolved call was recorded."""
+        if not self.impl_counts:
+            return None
+        return max(self.impl_counts, key=self.impl_counts.get)
 
     @property
     def total_s(self) -> float:
@@ -80,9 +101,12 @@ class Ledger:
                staging_s: float = 0.0, staging_bytes: int = 0,
                offloaded: bool = True, elems: int = 0,
                overlap_s: float = 0.0, exchange_s: float = 0.0,
-               exchange_bytes: int = 0) -> None:
+               exchange_bytes: int = 0,
+               impl: Optional[str] = None) -> None:
         r = self.region(name, offloaded)
         r.calls += 1
+        if impl is not None:
+            r.impl_counts[impl] = r.impl_counts.get(impl, 0) + 1
         r.device_calls += int(device)
         r.host_calls += int(not device)
         r.compute_s += compute_s
@@ -102,6 +126,14 @@ class Ledger:
         """Store a calibrated TARGET_CUT_OFF with the region it governs."""
         self.region(name).cutoff = cutoff
 
+    def set_calibrated_variant(self, name: str, target: str, bucket: int,
+                               winner: str) -> None:
+        """Store an autotuned variant winner for one (target, size-bucket)
+        cell with the region it governs — the declare-variant analogue of
+        :meth:`set_cutoff`."""
+        r = self.region(name)
+        r.calibrated_variants[variant_cell(target, bucket)] = winner
+
     def reset_timings(self) -> None:
         for r in self.regions.values():
             r.calls = r.device_calls = r.host_calls = 0
@@ -110,6 +142,8 @@ class Ledger:
             r.staging_bytes = r.exchange_bytes = 0
             r.device_compute_s = r.host_compute_s = 0.0
             r.host_elems = r.device_elems = 0
+            r.impl_counts = {}          # per-call record; calibrated_variants
+            #                             and cutoff persist like settings
 
     def merge_from(self, other: "Ledger") -> None:
         """Accumulate another ledger's rows into this one (rows matched by
@@ -131,6 +165,10 @@ class Ledger:
             m.exchange_bytes += r.exchange_bytes
             m.host_elems += r.host_elems
             m.device_elems += r.device_elems
+            for impl, n in r.impl_counts.items():
+                m.impl_counts[impl] = m.impl_counts.get(impl, 0) + n
+            for cell, winner in r.calibrated_variants.items():
+                m.calibrated_variants.setdefault(cell, winner)
             if m.cutoff is None:
                 m.cutoff = r.cutoff
 
@@ -165,6 +203,17 @@ class Ledger:
         host_elems = sum(r.host_elems for r in self.regions.values())
         device_elems = sum(r.device_elems for r in self.regions.values())
         elems = host_elems + device_elems
+        impl_counts: Dict[str, int] = {}
+        for r in self.regions.values():
+            for impl, n in r.impl_counts.items():
+                impl_counts[impl] = impl_counts.get(impl, 0) + n
+        calibrated = {r.name: dict(r.calibrated_variants)
+                      for r in self.regions.values()
+                      if r.calibrated_variants}
+        variant_wins: Dict[str, int] = {}
+        for cells in calibrated.values():
+            for winner in cells.values():
+                variant_wins[winner] = variant_wins.get(winner, 0) + 1
         return {
             "regions": len(self.regions),
             "offloaded_regions": sum(1 for r in self.regions.values()
@@ -197,6 +246,13 @@ class Ledger:
             "offload_elem_fraction": device_elems / elems if elems else 0.0,
             "cutoffs": {r.name: r.cutoff for r in self.regions.values()
                         if r.cutoff is not None},
+            # declare-variant dispatch (repro.core.regions Selector axis):
+            # which implementation each call actually ran, the autotuned
+            # winner per (region, target, size-bucket) cell, and how many
+            # cells each variant won across the whole calibration
+            "impl_counts": impl_counts,
+            "calibrated_variants": calibrated,
+            "variant_wins": variant_wins,
         }
 
     def table(self) -> List[dict]:

@@ -221,6 +221,13 @@ class BufferRotation:
     and ``retire`` returns the oldest bank's buffers to the backing pool once
     its region has finished computing.  With ``depth=2`` this is classic
     double buffering; deeper rotations support deeper lookahead.
+
+    Banks are **generation-tagged**: ``drain`` (end of a replay) bumps the
+    rotation's generation, and registrations carrying a stale generation —
+    a background staging task that outlived the replay that submitted it —
+    release their buffer straight back to the pool instead of parking it
+    in a bank the next replay would recycle mid-use.  Background tasks get
+    their tag through :meth:`handle`.
     """
 
     def __init__(self, pool: Optional[DeviceBufferPool] = None,
@@ -232,18 +239,34 @@ class BufferRotation:
         self._banks: List[list] = [[]]
         self._lock = threading.Lock()
         self.rotations = 0
+        self.generation = 0
 
-    def register(self, buf) -> None:
+    def register(self, buf, generation: Optional[int] = None) -> None:
         """Track an already-acquired buffer in the active bank.  Stagers that
         route pooled storage through a donating copy must register the copy's
-        RESULT (which owns the recycled storage), not the consumed buffer."""
+        RESULT (which owns the recycled storage), not the consumed buffer.
+
+        ``generation`` (from :meth:`handle`) defends the banks against
+        stale background registrations: a tag minted before the last
+        ``drain`` returns the buffer to the pool immediately."""
         with self._lock:
+            if generation is not None and generation != self.generation:
+                self.pool.release(buf)          # stale task: don't park it
+                return
             self._banks[-1].append(buf)
 
     def acquire(self, shape, dtype, memory_kind: Optional[str] = None):
         buf = self.pool.acquire(shape, dtype, memory_kind)
         self.register(buf)
         return buf
+
+    def handle(self) -> "_RotationHandle":
+        """A generation-tagged view for a background staging task.  It
+        quacks like the rotation (``pool`` attribute, ``register``) but
+        pins the CURRENT generation: if the rotation is drained before the
+        task lands its buffers, they go back to the pool instead of into a
+        fresh replay's banks."""
+        return _RotationHandle(self)
 
     def advance(self) -> None:
         """Open a new active bank (call when staging for the NEXT region
@@ -268,8 +291,12 @@ class BufferRotation:
                 self._banks.append([])
 
     def drain(self) -> None:
-        """Retire every bank (end of a replay)."""
+        """Retire every bank (end of a replay) and open a new generation:
+        any still-running background task registering after this point
+        releases to the pool instead of parking in the next replay's
+        banks."""
         with self._lock:
+            self.generation += 1
             while self._banks and (len(self._banks) > 1 or self._banks[0]):
                 for buf in self._banks.pop(0):
                     self.pool.release(buf)
@@ -280,6 +307,26 @@ class BufferRotation:
     def in_flight(self) -> int:
         with self._lock:
             return sum(len(b) for b in self._banks)
+
+
+class _RotationHandle:
+    """Generation-tagged proxy handed to background staging tasks (see
+    :meth:`BufferRotation.handle`)."""
+
+    __slots__ = ("_rot", "generation", "pool")
+
+    def __init__(self, rot: BufferRotation):
+        self._rot = rot
+        self.generation = rot.generation
+        self.pool = rot.pool
+
+    def register(self, buf) -> None:
+        self._rot.register(buf, generation=self.generation)
+
+    def acquire(self, shape, dtype, memory_kind: Optional[str] = None):
+        buf = self.pool.acquire(shape, dtype, memory_kind)
+        self.register(buf)
+        return buf
 
 
 GLOBAL_STAGING_POOL = HostStagingPool()

@@ -45,6 +45,14 @@ Capture semantics (what is and is not recorded):
 - everything else — Python scalars, ``float()``-extracted reductions,
   arrays computed *outside* any region — is captured as a constant.  Keep
   cross-region math inside regions if replays must react to new inputs.
+
+Implementation variants: capture always executes the region's base (ref)
+function, and the trace stores the *Region*, never a compiled callable —
+so every replay re-resolves each op's variant through the executing
+policy's :class:`~repro.core.regions.Selector` (``declare variant``
+dispatch).  One captured cavity step replays under ``StaticSelector("ref")``,
+``StaticSelector("pallas")``, or a calibrated ``AutotuneSelector`` without
+re-capturing (see docs/VARIANTS.md).
 """
 from __future__ import annotations
 
@@ -60,7 +68,8 @@ import numpy as np
 from repro.core import umem
 from repro.core.ledger import Ledger
 from repro.core.pool import BufferRotation
-from repro.core.regions import Executor, ExecutionPolicy, Region, as_region
+from repro.core.regions import (Executor, ExecutionPolicy, Region, as_region,
+                                policy_selector)
 
 
 def _is_array(x) -> bool:
@@ -201,36 +210,57 @@ class RegionProgram:
                                   [resolve(d) for d in self.out_leaves])
 
     # -- batched replay --------------------------------------------------
-    def as_fn(self) -> Callable:
+    def _op_impls(self, selector=None) -> Tuple[str, ...]:
+        """Resolve one variant name per op under ``selector`` (None: the
+        base ``ref`` everywhere).  Fused replay has no routing step, so
+        selection sees the ``default`` target and the captured example
+        size — the same prediction the async lookahead uses."""
+        if selector is None:
+            return tuple("ref" for _ in self.ops)
+        return tuple(
+            op.region.resolve(selector.select(op.region, "default", (), {},
+                                              size=op.example_size))
+            for op in self.ops)
+
+    def as_fn(self, selector=None) -> Callable:
         """The program as one pure function of its inputs (region fns
         composed by the recorded dataflow; constants closed over).  This is
         what ``replay_batch`` vmaps — no executor, no staging: the fused
-        beyond-paper path."""
+        beyond-paper path.  ``selector`` (a
+        :class:`~repro.core.regions.Selector`) swaps each op's
+        implementation variant into the composite."""
+        impls = self._op_impls(selector)
+        fns = [op.region.impl_fn(impl)
+               for op, impl in zip(self.ops, impls)]
+
         def fn(*inputs):
             in_leaves = self._input_leaves(inputs)
             env: List[List[Any]] = []
             resolve = _resolver(env, in_leaves)
-            for op in self.ops:
+            for op, f in zip(self.ops, fns):
                 args, kwargs = jax.tree.unflatten(
                     op.in_tree, [resolve(d) for d in op.leaves])
-                env.append(jax.tree.leaves(op.region.fn(*args, **kwargs)))
+                env.append(jax.tree.leaves(f(*args, **kwargs)))
             return jax.tree.unflatten(self.out_tree,
                                       [resolve(d) for d in self.out_leaves])
         return fn
 
-    def replay_batch(self, *stacked_inputs, executor=None, in_axes=0):
+    def replay_batch(self, *stacked_inputs, executor=None, in_axes=0,
+                     selector=None):
         """Replay N independent instances through one vmapped composite.
 
         ``stacked_inputs`` mirror the captured input structure with a
         leading batch axis on every array leaf (``in_axes`` as in
         ``jax.vmap``).  Captured constants broadcast.  The batch is
         accounted as one ledger row ``<name>[batch]`` on the executor's
-        ledger (when given)."""
-        key = repr(in_axes)           # distinct axes specs compile separately
+        ledger (when given).  ``selector`` picks each op's implementation
+        variant (distinct selections compile separately)."""
+        impls = self._op_impls(selector)
+        key = (repr(in_axes), impls)  # distinct axes/variant mixes compile
         batched = self._batched.get(key)
         if batched is None:
             batched = self._batched[key] = jax.jit(
-                jax.vmap(self.as_fn(), in_axes=in_axes))
+                jax.vmap(self.as_fn(selector), in_axes=in_axes))
         t0 = time.perf_counter()
         out = batched(*stacked_inputs)
         jax.block_until_ready(out)
@@ -378,6 +408,7 @@ class AsyncExecutor:
     def _replay_overlapped(self, prog: RegionProgram, inputs: tuple):
         pol = self.policy
         stager = pol.stager
+        selector = policy_selector(pol)
         in_leaves = prog._input_leaves(inputs)
         env: List[List[Any]] = []
         rotation = BufferRotation(pool=stager.device_pool,
@@ -397,10 +428,13 @@ class AsyncExecutor:
                                        min_bytes=pol.placer.min_bytes)
             return leaf
 
-        def prefetch_task(op: OpCall, ready: List[Tuple[int, Any]]):
+        def prefetch_task(op: OpCall, ready: List[Tuple[int, Any]],
+                          bank_handle):
+            # the generation-tagged handle keeps a task that outlives this
+            # replay from parking buffers in a successor's banks
             t0 = time.perf_counter()
             staged, s, b = stager.stage_leaves(
-                [placed(op, i, leaf) for i, leaf in ready], rotation)
+                [placed(op, i, leaf) for i, leaf in ready], bank_handle)
             return _Prefetch({i: y for (i, _), y in zip(ready, staged)},
                              s, b, t0, time.perf_counter())
 
@@ -413,6 +447,11 @@ class AsyncExecutor:
                 args, kwargs = jax.tree.unflatten(op.in_tree, raw)
                 n = r.size_fn(args, kwargs)
                 tgt = pol.router.target(r, args, kwargs, size=n)
+                # captured rows carry the REGION, not a compiled callable:
+                # every replay re-resolves the variant, so one trace runs
+                # under any selector (resolve(): unknown names -> ref)
+                impl = r.resolve(
+                    selector.select(r, tgt, args, kwargs, size=n))
                 stage = stager.stages and r.offloaded and tgt != "host"
                 staging_s, staging_b, overlap_s = 0.0, 0, 0.0
                 pf: Optional[_Prefetch] = None
@@ -447,7 +486,7 @@ class AsyncExecutor:
                     # bank drains at the end)
                     args, kwargs = pol.placer.place_args(r, args, kwargs)
                 t0 = time.perf_counter()
-                out = r.executable(tgt)(*args, **kwargs)
+                out = r.executable(tgt, impl)(*args, **kwargs)
                 # submit the NEXT op's prefetch before blocking on this
                 # compute — this ordering is the entire overlap
                 if k + 1 < len(prog.ops):
@@ -463,7 +502,8 @@ class AsyncExecutor:
                         if ready:
                             rotation.advance()
                             pending = (k + 1,
-                                       tp.submit(prefetch_task, nxt, ready))
+                                       tp.submit(prefetch_task, nxt, ready,
+                                                 rotation.handle()))
                 jax.block_until_ready(out)
                 t1 = time.perf_counter()
                 prev_compute = (t0, t1)
@@ -478,7 +518,7 @@ class AsyncExecutor:
                                    offloaded=r.offloaded, compute_s=t1 - t0,
                                    staging_s=staging_s,
                                    staging_bytes=staging_b, elems=n,
-                                   overlap_s=overlap_s)
+                                   overlap_s=overlap_s, impl=impl)
                 env.append(jax.tree.leaves(out))
         rotation.drain()
         return jax.tree.unflatten(prog.out_tree,

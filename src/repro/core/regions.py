@@ -10,7 +10,7 @@ abstraction:
   ``if(target: n > TARGET_CUT_OFF)``), the offload hint, and optional
   :class:`~repro.core.umem.MemSpace` placement hints per argument / result.
 
-* :class:`ExecutionPolicy` — three orthogonal, composable axes:
+* :class:`ExecutionPolicy` — four orthogonal, composable axes:
 
   - **placement** (:class:`Placer`): where operands/results nominally live,
     expressed as ``MemSpace`` hints applied through ``umem`` (paper C1);
@@ -20,7 +20,16 @@ abstraction:
     ``repro.core.dispatch`` (paper C3, listings 4-6);
   - **staging** (:class:`Stager`): what crossing the host/device boundary
     costs — nothing on an APU, real out-of-place copies through pooled
-    buffers on a managed-memory dGPU (paper §5 Fig 6, C4).
+    buffers on a managed-memory dGPU (paper §5 Fig 6, C4);
+  - **selection** (:class:`Selector`): which *implementation variant* of
+    the region runs — OpenMP 5.2's ``declare variant`` / ``metadirective``
+    dispatch.  A region registers named variants (``ref`` is always the
+    decorated function; custom kernels register as e.g. ``pallas``) and
+    the policy picks one per call: :class:`StaticSelector` (one name
+    everywhere, base-function fallback), :class:`TargetSelector`
+    (``match(device)``-style target-conditioned defaults), or
+    :class:`AutotuneSelector` (calibrated winners per region x target x
+    size-bucket, persisted in the ledger like ``TARGET_CUT_OFF``).
 
 * :class:`Executor` — runs Regions under a policy and accounts every call
   (where it ran, what it cost, how many elements were routed which way)
@@ -126,30 +135,97 @@ class Region:                           # hashable, usable as dict/set keys
         self.__name__ = getattr(self.fn, "__name__", "region")
         self.__qualname__ = self.__name__
         self._jitted = None
-        self._exec: Dict[str, Callable] = {}
+        #: named implementations (OpenMP declare variant): "ref" is ALWAYS
+        #: the decorated function itself — the base function every selector
+        #: can fall back to
+        self._variants: Dict[str, Callable] = {"ref": self.fn}
+        self._jvar: Dict[str, Callable] = {}
+        self._exec: Dict[Tuple[str, str], Callable] = {}
         self._param_index = _param_indices(self.fn)
 
-    # -- per-target compiled executables --------------------------------
+    # -- implementation variants (declare variant) -----------------------
+    @property
+    def variants(self) -> Tuple[str, ...]:
+        """Names of the registered implementation variants."""
+        return tuple(self._variants)
+
+    def variant(self, name: str, fn: Optional[Callable] = None):
+        """Register a named implementation of this region — the
+        ``declare variant`` directive.  Decorator form::
+
+            @region("Amul")
+            def amul(diag, off, x): ...          # the "ref" variant
+
+            @amul.variant("pallas")
+            def _amul_kernel(diag, off, x): ...  # same signature/semantics
+
+        Variants must accept the same arguments and return the same
+        structure as the base function; which one runs is decided per call
+        by the executing policy's :class:`Selector`.  Re-registering
+        ``"ref"`` replaces the base function itself, so every path —
+        jitted executables and the fused ``as_fn`` composite alike — sees
+        the same implementation."""
+        def register(f: Callable) -> Callable:
+            self._variants[name] = f
+            if name == "ref":                   # ref IS the base function
+                self.fn = f
+                self._jitted = None
+            self._jvar.pop(name, None)          # drop stale compilations
+            for key in [k for k in self._exec if k[1] == name]:
+                del self._exec[key]
+            return f
+        return register(fn) if fn is not None else register
+
+    def impl_fn(self, name: str = "ref") -> Callable:
+        """The raw (unjitted) callable of one registered variant."""
+        try:
+            return self._variants[name]
+        except KeyError:
+            raise KeyError(f"region {self.name!r} has no variant {name!r}; "
+                           f"registered: {self.variants}") from None
+
+    def resolve(self, name: str) -> str:
+        """Variant-name resolution with the declare-variant fallback: an
+        unregistered name dispatches to the base function (``ref``)."""
+        return name if name in self._variants else "ref"
+
+    # -- per-(target, variant) compiled executables ----------------------
     @property
     def jitted(self):
-        """The target-agnostic jitted executable (legacy shim attribute)."""
+        """The target-agnostic jitted ref executable (legacy shim
+        attribute; prefer :meth:`jitted_variant`)."""
         if self._jitted is None:
             self._jitted = jax.jit(self.fn)
         return self._jitted
+
+    def jitted_variant(self, name: str = "ref") -> Callable:
+        """The target-agnostic jitted executable of one variant (unknown
+        names fall back to ``ref``, like :meth:`executable`)."""
+        name = self.resolve(name)
+        j = self._jvar.get(name)
+        if j is None:
+            j = self.jitted if name == "ref" else jax.jit(self.impl_fn(name))
+            self._jvar[name] = j
+        return j
 
     @property
     def region_name(self) -> str:
         """Legacy shim attribute; prefer ``.name``."""
         return self.name
 
-    def executable(self, target: str = "default") -> Callable:
-        """The compiled executable for one routing target.
+    def executable(self, target: str = "default",
+                   impl: str = "ref") -> Callable:
+        """The compiled executable for one (routing target, variant) pair.
 
         ``default`` runs wherever operands already live (the APU model);
         ``host``/``device`` pin the call to that backend — the two
-        executables of the paper's ``if(target: ...)`` clause."""
-        if target not in self._exec:
-            jfn = self.jitted
+        executables of the paper's ``if(target: ...)`` clause.  ``impl``
+        names a registered variant (unknown names fall back to ``ref``,
+        the declare-variant base-function rule)."""
+        impl = self.resolve(impl)
+        key = (target, impl)
+        if key not in self._exec:
+            jfn = self.jitted_variant(impl)
             if target == "default":
                 call = jfn
             else:
@@ -159,8 +235,8 @@ class Region:                           # hashable, usable as dict/set keys
                     with jax.default_device(_dev):
                         return _jfn(*args, **kwargs)
 
-            self._exec[target] = call
-        return self._exec[target]
+            self._exec[key] = call
+        return self._exec[key]
 
     # -- direct invocation ----------------------------------------------
     def __call__(self, *args, **kwargs):
@@ -173,7 +249,7 @@ class Region:                           # hashable, usable as dict/set keys
         self.ledger.record(self.name, device=self.offloaded,
                            offloaded=self.offloaded,
                            compute_s=time.perf_counter() - t0,
-                           elems=self.size_fn(args, kwargs))
+                           elems=self.size_fn(args, kwargs), impl="ref")
         return out
 
     # -- legacy adapter --------------------------------------------------
@@ -193,6 +269,8 @@ class Region:                           # hashable, usable as dict/set keys
         r.halo_args = None
         r.ledger = GLOBAL_LEDGER
         r._jitted = getattr(obj, "jitted", None) or jax.jit(obj)
+        r._variants = {"ref": obj}
+        r._jvar = {"ref": r._jitted}
         r._exec = {}
         r.__name__ = getattr(obj, "__name__", "region")
         r.__qualname__ = r.__name__
@@ -357,7 +435,17 @@ class MigrationStager:
         except Exception:
             return True                                 # conservative
 
-    def _migrate_out(self, x):
+    def _migrate_out(self, x, pending: Optional[list] = None):
+        """Land one result in a pooled host page and re-wrap it host-side.
+
+        The wrap may COPY the page *asynchronously*: the page cannot go
+        back to the pool (where the very next result lands a copyto)
+        until that read has finished, or a delayed copy reads recycled
+        bytes — the PR-2 replay-corruption race.  Ownership is therefore
+        decided only after the wrap is ready: standalone calls block here;
+        ``stage_out`` passes ``pending`` to collect (wrap, page) pairs,
+        block ONCE on the whole staged tree (copies overlap), and settle
+        afterwards."""
         if not isinstance(x, jax.Array):
             return x
         h = np.asarray(jax.device_get(x))               # device -> host copy
@@ -366,18 +454,27 @@ class MigrationStager:
         y = umem.place(buf, self.arena.host_space, self.arena.device)
         if not isinstance(y, jax.Array):                # no host space: wrap
             y = jax.device_put(buf, self.arena.device)
-        # recycle the page when the wrap copied; a zero-copy device_put
-        # leaves y aliasing the pooled bytes (CPU backends), so there the
-        # page returns to the pool only when the result array dies — the
-        # Umpire model: the app "frees" host memory by dropping the result
-        if self._aliases(y, buf):
-            try:
-                weakref.finalize(y, self.host_pool.release, buf)
-            except TypeError:              # pragma: no cover - no weakrefs
-                pass
+        if pending is None:
+            jax.block_until_ready(y)
+            self._settle_pages([(y, buf)])
         else:
-            self.host_pool.release(buf)
+            pending.append((y, buf))
         return y
+
+    def _settle_pages(self, pending) -> None:
+        """Decide page ownership for READY wraps: recycle the page when the
+        wrap copied; a zero-copy device_put leaves the wrap aliasing the
+        pooled bytes (CPU backends), so there the page returns to the pool
+        only when the result array dies — the Umpire model: the app
+        "frees" host memory by dropping the result."""
+        for y, buf in pending:
+            if self._aliases(y, buf):
+                try:
+                    weakref.finalize(y, self.host_pool.release, buf)
+                except TypeError:          # pragma: no cover - no weakrefs
+                    pass
+            else:
+                self.host_pool.release(buf)
 
     def stage_in(self, region, args, kwargs):
         t0 = time.perf_counter()
@@ -400,8 +497,10 @@ class MigrationStager:
     def stage_out(self, region, out, staged_in=None):
         t0 = time.perf_counter()
         nbytes = self.arena.bytes_of(out)
-        staged = jax.tree.map(self._migrate_out, out)
-        jax.block_until_ready(staged)
+        pending: list = []
+        staged = jax.tree.map(lambda x: self._migrate_out(x, pending), out)
+        jax.block_until_ready(staged)       # all wrap copies, overlapped
+        self._settle_pages(pending)
         if staged_in is not None:                       # recycle dead inputs
             for x in jax.tree.leaves(staged_in):
                 if isinstance(x, jax.Array):
@@ -445,42 +544,178 @@ class Placer:
 
 
 # ---------------------------------------------------------------------------
-# ExecutionPolicy = placement x routing x staging
+# Selection axis: which implementation variant runs (declare variant)
+# ---------------------------------------------------------------------------
+
+class Selector(Protocol):
+    """The fourth policy axis: resolve one registered variant per call.
+
+    ``target`` is the routing decision already made by the policy's Router
+    (``default`` / ``host`` / ``device``), so selection can condition on
+    where the call will run — OpenMP's ``match(device={...})`` clause."""
+
+    def select(self, region: Region, target: str, args, kwargs,
+               size: Optional[int] = None) -> str: ...
+
+
+@dataclasses.dataclass
+class StaticSelector:
+    """One named implementation everywhere.  Regions that never registered
+    the name run their base function instead — the declare-variant
+    fallback, which is what lets a whole captured program replay under
+    ``StaticSelector("pallas")`` when only its hot regions carry kernels."""
+    impl: str = "ref"
+
+    def select(self, region: Region, target: str, args, kwargs,
+               size: Optional[int] = None) -> str:
+        return region.resolve(self.impl)
+
+
+#: the do-nothing selector: every region runs its decorated function, the
+#: exact pre-variants behavior
+DEFAULT_SELECTOR = StaticSelector("ref")
+
+
+@dataclasses.dataclass
+class TargetSelector:
+    """Target-conditioned defaults — ``declare variant match(construct,
+    device)``: device-side calls (including ``default``, the APU's
+    resident execution) prefer the custom kernel, host-side calls the
+    host-tuned path, with the usual fallback to ``ref``."""
+    device_impl: str = "pallas"
+    host_impl: str = "host"
+
+    def select(self, region: Region, target: str, args, kwargs,
+               size: Optional[int] = None) -> str:
+        want = self.host_impl if target == "host" else self.device_impl
+        return region.resolve(want)
+
+
+def size_bucket(n: int) -> int:
+    """Power-of-two size bucket: bucket ``b`` covers ``[2^(b-1), 2^b)``.
+    The autotune analogue of the paper's single TARGET_CUT_OFF — coarse
+    enough that a handful of calibration sizes covers a workload, fine
+    enough that the host/kernel crossover lands in its own cell."""
+    return int(n).bit_length()
+
+
+@dataclasses.dataclass
+class AutotuneSelector:
+    """Calibrated variant selection: winners per (region, target,
+    size-bucket), measured by :meth:`calibrate` the way
+    ``AdaptivePolicy.calibrate`` measures the routing cutoff, and persisted
+    on the region's ledger row (``coverage_report()["calibrated_variants"]``).
+
+    Uncalibrated cells fall back to the nearest calibrated bucket of the
+    same (region, target), then to ``fallback`` (default: ``ref``)."""
+    fallback: Any = dataclasses.field(
+        default_factory=lambda: StaticSelector("ref"))
+    winners: Dict[Tuple[str, str, int], str] = dataclasses.field(
+        default_factory=dict)
+
+    def select(self, region: Region, target: str, args, kwargs,
+               size: Optional[int] = None) -> str:
+        n = region.size_fn(args, kwargs) if size is None else size
+        b = size_bucket(n)
+        win = self.winners.get((region.name, target, b))
+        if win is None:
+            near = [(abs(bb - b), bb) for (rn, t, bb) in self.winners
+                    if rn == region.name and t == target]
+            if near:
+                win = self.winners[(region.name, target, min(near)[1])]
+        if win is None:
+            return self.fallback.select(region, target, args, kwargs, size=n)
+        return region.resolve(win)
+
+    def calibrate(self, target_region, make_args: Callable[[int], tuple],
+                  sizes: Sequence[int] = (256, 4096, 65536),
+                  targets: Sequence[str] = ("default",),
+                  reps: int = 10, ledger: Optional[Ledger] = None) -> dict:
+        """Time every registered variant of ``target_region`` over a size
+        ladder per routing target; store the winner per (target, bucket)
+        and persist it with the region's ledger row.
+
+        ``make_args(n)`` builds one positional argument tuple of problem
+        size ~``n``; the bucket is derived from the region's own
+        ``size_fn`` on those arguments, so calibration and selection agree
+        on the size measure.  Returns ``{(target, bucket): winner}``."""
+        r = as_region(target_region)
+        chosen = {}
+        for tgt in targets:
+            for n in sorted(sizes):
+                args = make_args(n)
+                best, best_t = "ref", float("inf")
+                for name in r.variants:
+                    ex = r.executable(tgt, name)
+                    out = ex(*args)
+                    jax.block_until_ready(out)          # compile + warm
+                    t0 = time.perf_counter()
+                    for _ in range(reps):
+                        out = ex(*args)
+                    jax.block_until_ready(out)
+                    dt = (time.perf_counter() - t0) / reps
+                    if dt < best_t:
+                        best, best_t = name, dt
+                b = size_bucket(r.size_fn(args, {}))
+                self.winners[(r.name, tgt, b)] = best
+                chosen[(tgt, b)] = best
+                r.ledger.set_calibrated_variant(r.name, tgt, b, best)
+                if ledger is not None and ledger is not r.ledger:
+                    ledger.set_calibrated_variant(r.name, tgt, b, best)
+        return chosen
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPolicy = placement x routing x staging x selection
 # ---------------------------------------------------------------------------
 
 @runtime_checkable
 class ExecutionPolicy(Protocol):
-    """What an Executor needs: a name and the three composable axes."""
+    """What an Executor needs: a name and the composable axes.  ``selector``
+    is optional for backward compatibility — executors treat a missing
+    attribute as ``DEFAULT_SELECTOR`` (always ``ref``)."""
     name: str
     router: Router
     stager: Stager
     placer: Placer
 
 
+def policy_selector(policy) -> Selector:
+    """The policy's selection axis, defaulting to ref-everywhere for
+    pre-variants policy objects."""
+    return getattr(policy, "selector", None) or DEFAULT_SELECTOR
+
+
 @dataclasses.dataclass
 class ComposedPolicy:
-    """A concrete ExecutionPolicy assembled from the three axes."""
+    """A concrete ExecutionPolicy assembled from the four axes."""
     name: str
     router: Any = dataclasses.field(default_factory=StaticRouter)
     stager: Any = dataclasses.field(default_factory=NullStager)
     placer: Any = dataclasses.field(default_factory=Placer)
+    selector: Any = dataclasses.field(
+        default_factory=lambda: StaticSelector("ref"))
 
 
 class UnifiedPolicy(ComposedPolicy):
     """APU model (paper §3): operands stay where they are, regions run
     back-to-back, zero staging by construction."""
 
-    def __init__(self, placer: Optional[Placer] = None):
+    def __init__(self, placer: Optional[Placer] = None,
+                 selector: Optional[Selector] = None):
         super().__init__("unified", StaticRouter("default", "default"),
-                         NullStager(), placer or Placer())
+                         NullStager(), placer or Placer(),
+                         selector or StaticSelector("ref"))
 
 
 class HostPolicy(ComposedPolicy):
     """dCPU model: every region — directive or not — runs on the host."""
 
-    def __init__(self, placer: Optional[Placer] = None):
+    def __init__(self, placer: Optional[Placer] = None,
+                 selector: Optional[Selector] = None):
         super().__init__("host", StaticRouter("host", "host"),
-                         NullStager(), placer or Placer())
+                         NullStager(), placer or Placer(),
+                         selector or StaticSelector("ref"))
 
 
 class DiscretePolicy(ComposedPolicy):
@@ -490,13 +725,15 @@ class DiscretePolicy(ComposedPolicy):
     def __init__(self, arena: Optional[UnifiedArena] = None,
                  host_pool: Optional[HostStagingPool] = None,
                  device_pool: Optional[DeviceBufferPool] = None,
-                 placer: Optional[Placer] = None):
+                 placer: Optional[Placer] = None,
+                 selector: Optional[Selector] = None):
         arena = arena or UnifiedArena()
         super().__init__("discrete", StaticRouter("device", "default"),
                          MigrationStager(arena,
                                          host_pool or HostStagingPool(),
                                          device_pool or DeviceBufferPool()),
-                         placer or Placer())
+                         placer or Placer(),
+                         selector or StaticSelector("ref"))
         self.arena = arena
 
 
@@ -507,9 +744,11 @@ class AdaptivePolicy(ComposedPolicy):
 
     def __init__(self, cutoff: int = DEFAULT_CUTOFF,
                  stager: Optional[Stager] = None,
-                 placer: Optional[Placer] = None):
+                 placer: Optional[Placer] = None,
+                 selector: Optional[Selector] = None):
         super().__init__("adaptive", SizeRouter(cutoff),
-                         stager or NullStager(), placer or Placer())
+                         stager or NullStager(), placer or Placer(),
+                         selector or StaticSelector("ref"))
 
     @property
     def cutoff(self) -> int:
@@ -602,6 +841,10 @@ class Executor:
         pol = self.policy
         n = r.size_fn(args, kwargs)
         tgt = pol.router.target(r, args, kwargs, size=n)
+        # resolve() here, not just in executable(): custom selectors may
+        # return unregistered names, and the ledger must record what RAN
+        impl = r.resolve(policy_selector(pol).select(r, tgt, args, kwargs,
+                                                     size=n))
         args, kwargs = pol.placer.place_args(r, args, kwargs)
         staging_s = 0.0
         staging_b = 0
@@ -613,7 +856,7 @@ class Executor:
             staging_s += s
             staging_b += b
         t0 = time.perf_counter()
-        out = r.executable(tgt)(*args, **kwargs)
+        out = r.executable(tgt, impl)(*args, **kwargs)
         jax.block_until_ready(out)
         compute_s = time.perf_counter() - t0
         if stage:
@@ -625,7 +868,7 @@ class Executor:
         self.ledger.record(self._row_name(r), device=device,
                            offloaded=r.offloaded,
                            compute_s=compute_s, staging_s=staging_s,
-                           staging_bytes=staging_b, elems=n)
+                           staging_bytes=staging_b, elems=n, impl=impl)
         return out
 
     def report(self) -> dict:

@@ -78,7 +78,7 @@ from repro.core.ledger import Ledger
 from repro.core.pool import DeviceBufferPool
 from repro.core.program import Lit, RegionProgram, _is_array, _resolver
 from repro.core.regions import (ExecutionPolicy, Executor, Region,
-                                UnifiedPolicy, _copy_into)
+                                UnifiedPolicy, _copy_into, policy_selector)
 from repro.core.umem import replicated_sharding, shard_along
 
 
@@ -298,6 +298,7 @@ class ShardExecutor:
     def replay_program(self, prog: RegionProgram, *inputs):
         pol = self.policy
         stager = pol.stager
+        selector = policy_selector(pol)
         staging = getattr(stager, "stages", False)
         nd = self.n_devices
         in_leaves = list(prog._input_leaves(inputs))
@@ -329,6 +330,11 @@ class ShardExecutor:
             if tgt == "host":
                 env.append(self._run_host(r, op, raw, n))
                 continue
+            # variant selection happens here, per replayed call — the
+            # captured trace stores Regions, so the same program runs under
+            # any Selector at node scale too (XLA partitions whichever
+            # variant's executable is chosen; resolve(): unknown -> ref)
+            impl = r.resolve(selector.select(r, tgt, args, kwargs, size=n))
             staging_s, staging_b = 0.0, 0
             acquired: list = []
             if staging and r.offloaded:
@@ -337,7 +343,7 @@ class ShardExecutor:
             raw, exchange_s, exchange_bytes_dev = self._exchange(op, raw)
             args, kwargs = jax.tree.unflatten(op.in_tree, raw)
             t0 = time.perf_counter()
-            out = r.jitted(*args, **kwargs)
+            out = r.jitted_variant(impl)(*args, **kwargs)
             jax.block_until_ready(out)
             compute_s = time.perf_counter() - t0
             if staging and r.offloaded:
@@ -356,7 +362,7 @@ class ShardExecutor:
                            compute_s=compute_s / nd,
                            staging_s=staging_s / nd,
                            staging_bytes=staging_b // nd,
-                           elems=n // nd)
+                           elems=n // nd, impl=impl)
                 if halo is not None:
                     led.record(halo.name, device=True, offloaded=True,
                                compute_s=0.0,
@@ -371,12 +377,15 @@ class ShardExecutor:
         the host executable once, account on the node's host ledger."""
         host = [np.asarray(x) if _is_array(x) else x for x in raw]
         args, kwargs = jax.tree.unflatten(op.in_tree, host)
+        impl = r.resolve(policy_selector(self.policy).select(
+            r, "host", args, kwargs, size=n))
         t0 = time.perf_counter()
-        out = r.executable("host")(*args, **kwargs)
+        out = r.executable("host", impl)(*args, **kwargs)
         jax.block_until_ready(out)
         self.host_ledger.record(self._row_name(r), device=False,
                                 offloaded=r.offloaded,
-                                compute_s=time.perf_counter() - t0, elems=n)
+                                compute_s=time.perf_counter() - t0, elems=n,
+                                impl=impl)
         return jax.tree.leaves(out)
 
     # -- accounting ------------------------------------------------------

@@ -155,3 +155,11 @@ def rb_dilu_backward(rdiag, red, off, y):
         interpret=_INTERPRET,
     )(rdp, redp, offs, yp)
     return out[:n].reshape(shape3)
+
+
+def rb_dilu(rdiag, red, off, r):
+    """Full preconditioner apply: the forward->backward half-sweep
+    composition, defined ONCE here — ops.py jits it and the application
+    regions (precond/solvers) register it as their pallas variant."""
+    return rb_dilu_backward(rdiag, red, off,
+                            rb_dilu_forward(rdiag, red, off, r))

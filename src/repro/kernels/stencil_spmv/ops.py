@@ -5,8 +5,4 @@ from repro.kernels.stencil_spmv import kernel as _k
 
 stencil_spmv = jax.jit(_k.stencil_spmv)
 
-
-@jax.jit
-def rb_dilu_apply(rdiag, red, off, r):
-    y = _k.rb_dilu_forward(rdiag, red, off, r)
-    return _k.rb_dilu_backward(rdiag, red, off, y)
+rb_dilu_apply = jax.jit(_k.rb_dilu)

@@ -35,6 +35,10 @@ def parse_args(argv=None):
                     help="cavity grid; z must divide by --apus")
     ap.add_argument("--policy", default="unified",
                     choices=("unified", "discrete", "host", "adaptive"))
+    ap.add_argument("--variant", default="ref",
+                    help="implementation variant both replays run under "
+                         "(StaticSelector; regions without it fall back "
+                         "to ref — docs/VARIANTS.md)")
     ap.add_argument("--inner-max", type=int, default=6)
     ap.add_argument("--out", default="", help="also write the JSON here")
     return ap.parse_args(argv)
@@ -61,7 +65,7 @@ def main(argv=None) -> dict:
 
     from repro.cfd.grid import Grid
     from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
-    from repro.core.regions import Executor, make_policy
+    from repro.core.regions import Executor, StaticSelector, make_policy
     from repro.core.shard_program import shard_program
     from repro.launch.mesh import make_apu_mesh
 
@@ -75,15 +79,23 @@ def main(argv=None) -> dict:
     st, _, _ = app.run_steps(st, 1)          # develop flow + warm caches
     prog = app.capture_step(st)
 
+    # BOTH replays run the same variant selection, so sharded-vs-single
+    # parity stays within the §2 bound whichever implementation runs
+    selector = StaticSelector(args.variant)
+
     # single-device reference replay of the same trace
-    ref = Executor(make_policy(args.policy))
+    ref_policy = make_policy(args.policy)
+    ref_policy.selector = selector
+    ref = Executor(ref_policy)
     app.replay_steps(prog, st, 1, ref)       # warm per-sharding compiles
     ref.ledger.reset_timings()
     s_ref, fom_ref = app.replay_steps(prog, st, args.steps, ref)
 
     # decomposed replay across the simulated node
     mesh = make_apu_mesh(args.apus)
-    sp = shard_program(prog, mesh, make_policy(args.policy))
+    sh_policy = make_policy(args.policy)
+    sh_policy.selector = selector
+    sp = shard_program(prog, mesh, sh_policy)
     app.replay_steps(prog, st, 1, sp)        # warm sharded compiles
     sp.reset_timings()
     s_sh, fom_sh = app.replay_steps(prog, st, args.steps, sp)
@@ -102,6 +114,8 @@ def main(argv=None) -> dict:
         "grid": list(grid),
         "steps": args.steps,
         "policy": args.policy,
+        "variant": args.variant,
+        "impl_counts": rep["impl_counts"],
         "ops": len(prog),
         "fom_single_s": fom_ref,
         "fom_sharded_s": fom_sh,

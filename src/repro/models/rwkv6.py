@@ -16,13 +16,20 @@ is a cumulative-decay difference with t >= i, hence <= 0 — no overflow):
 
 ``repro.kernels.rwkv6_scan`` implements the same chunked math as a Pallas
 kernel; this module is the pure-JAX path and the kernels' semantics anchor.
+The scan is declared once as the :data:`RWKV6_SCAN` region with three
+variants — ``ref`` (sequential oracle), ``chunked`` (closed form below),
+``pallas`` (the kernel) — selected per call by the executing policy
+(docs/VARIANTS.md) or explicitly via ``rwkv_train(..., impl=...)``.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.regions import region
 from repro.models.layers import ParamSpec, noshard, rmsnorm
 
 LORA_R = 32  # rank of the ddlerp / decay adapters (RWKV6 uses 32/64)
@@ -140,15 +147,62 @@ def rwkv_ref_scan(r, k, v, logw, u, S_in):
     return jnp.moveaxis(outs, 0, 1), S_out
 
 
-def rwkv_train(p, x, cfg: ModelConfig, *, ctx, state=None, chunk: int = 64):
-    """Full-sequence time-mix. Returns (y, new_state)."""
+# ---------------------------------------------------------------------------
+# The scan as ONE region with declared implementation variants
+# ---------------------------------------------------------------------------
+
+def _chunk_size(T: int, cap: int = 64) -> int:
+    """Largest chunk <= cap that divides T (shapes are static under jit)."""
+    return max(c for c in range(1, min(cap, T) + 1) if T % c == 0)
+
+
+@region("rwkv6(scan)")
+def RWKV6_SCAN(r, k, v, logw, u, S_in):
+    """Time-mix scan from state ``S_in`` — the ``ref`` variant is the
+    sequential oracle (exact recurrence, one token at a time)."""
+    return rwkv_ref_scan(r, k, v, logw, u, S_in)
+
+
+@RWKV6_SCAN.variant("chunked")
+def _scan_chunked(r, k, v, logw, u, S_in):
+    return rwkv_chunk(r, k, v, logw, u, S_in, _chunk_size(r.shape[1]))
+
+
+@RWKV6_SCAN.variant("pallas")
+def _scan_pallas(r, k, v, logw, u, S_in):
+    # the kernel runs the zero-state scan; the recurrence is linear in the
+    # state, so S_in superposes afterwards: out_t += (r_t * exp(la_{t-1}))
+    # @ S_in and S_final += exp(la_T) * S_in (la = running decay sum)
+    from repro.kernels.rwkv6_scan import kernel as K
+    out, S_out = K.rwkv6_scan(r, k, v, logw, u,
+                              chunk=_chunk_size(r.shape[1], K.CHUNK))
+    la = jnp.cumsum(logw.astype(jnp.float32), axis=1)
+    la_prev = la - logw
+    out = out + jnp.einsum("bthi,bhij->bthj",
+                           r.astype(jnp.float32) * jnp.exp(la_prev), S_in)
+    S_out = S_out + jnp.exp(la[:, -1])[..., None] * S_in
+    return out, S_out
+
+
+def rwkv_train(p, x, cfg: ModelConfig, *, ctx, state=None, chunk: int = 64,
+               impl: Optional[str] = None):
+    """Full-sequence time-mix. Returns (y, new_state).
+
+    ``impl`` names a registered variant of :data:`RWKV6_SCAN` (``ref`` /
+    ``chunked`` / ``pallas``); the default keeps the chunked closed form
+    with the caller's ``chunk`` — identical to the pre-variants behavior.
+    """
     B, T, d = x.shape
     x_prev_tok = state["x_prev"] if state is not None else jnp.zeros((B, d), x.dtype)
     x_shift = jnp.concatenate([x_prev_tok[:, None], x[:, :-1]], axis=1)
     r, k, v, g, logw = _projections(p, x, x_shift, cfg)
     S_in = (state["S"] if state is not None
             else jnp.zeros((B, cfg.n_heads, cfg.hd, cfg.hd), jnp.float32))
-    out, S_out = rwkv_chunk(r, k, v, logw, p["u"], S_in, chunk)
+    if impl is None:
+        out, S_out = rwkv_chunk(r, k, v, logw, p["u"], S_in, chunk)
+    else:
+        scan = RWKV6_SCAN.impl_fn(RWKV6_SCAN.resolve(impl))
+        out, S_out = scan(r, k, v, logw, p["u"], S_in)
     # per-head groupnorm then output gate
     out = rmsnorm(out.reshape(B, T, cfg.n_heads, cfg.hd),
                   jnp.ones((cfg.hd,), jnp.float32)) * p["ln_out"].astype(out.dtype)
