@@ -279,6 +279,114 @@ def fig4_coverage(grid=(12, 12, 12)):
             f";regions={rep['offloaded_regions']}/{rep['regions']}")
 
 
+def fig_serve(batch: int = 2, prompt_len: int = 12, gen: int = 8,
+              out_json: str = "artifacts/serve/fig_serve.json"):
+    """Beyond-paper serving figure: the LM request path on the region
+    spine (PREFILL / DECODE_STEP / KV_APPEND captured as RegionPrograms,
+    repro.launch.serve) replayed under unified vs discrete vs
+    offloaded-KV policies — ONE captured trace, three policies — with the
+    per-policy coverage_report() in the derived column and every token
+    sequence parity-asserted against the pre-capture jit path.  Also
+    measures the decode stream with a per-token block_until_ready vs one
+    sync per interval (the retired per-token sync serialized the stream)
+    and records the reclaimed latency.  On a CPU-only container XLA's
+    dispatch is effectively synchronous, so ``reclaimed_ms`` ~ 0 there —
+    the row records the claim structure; the win needs a real async
+    device stream (same caveat as fig6b's wall-clock)."""
+    from types import SimpleNamespace
+
+    from repro.configs.reduced import reduced as make_reduced
+    from repro.configs.registry import get_config
+    from repro.core.ledger import Ledger
+    from repro.core.regions import Executor
+    from repro.launch import serve as SV
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.launch.policy import lm_policy
+    from repro.models import transformer as T
+
+    cfg = make_reduced(get_config("tinyllama-1.1b"))
+    mesh = make_smoke_mesh()
+    max_len = prompt_len + gen
+    key = jax.random.PRNGKey(0)
+    params = T.init(key, cfg)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab,
+                                 jnp.int32)
+    ns = SimpleNamespace(batch=batch, prompt_len=prompt_len, gen=gen)
+    batch_in = SV._prefill_inputs(cfg, ns, prompts)
+
+    # -- pre-capture jit path: parity reference + stream-sync measurement
+    prefill_j, decode_j, make_cache = SV.build_server(cfg, mesh, batch,
+                                                      max_len)
+    logits, cache_w = prefill_j(params, batch_in, make_cache())
+    tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    jax.block_until_ready(
+        decode_j(params, tok0, cache_w, jnp.int32(prompt_len)))  # warm
+    stream_ms = {}
+    seq_ref = None
+    for sync_name, sync_every in (("per_token", 1), ("interval", 0)):
+        best = float("inf")
+        for _ in range(3):
+            _, cache_s = prefill_j(params, batch_in, make_cache())
+            t0 = time.perf_counter()
+            toks_s, _ = SV.decode_stream(decode_j, params, tok0, cache_s,
+                                         prompt_len, gen,
+                                         sync_every=sync_every)
+            best = min(best, time.perf_counter() - t0)
+        stream_ms[sync_name] = best * 1e3
+        seq_ref = np.asarray(jnp.stack(toks_s, axis=1))
+    reclaimed = stream_ms["per_token"] - stream_ms["interval"]
+    row("fig_serve/stream_sync", stream_ms["interval"] * 1e3 / gen,
+        f"per_token_ms={stream_ms['per_token']:.2f}"
+        f";interval_ms={stream_ms['interval']:.2f}"
+        f";reclaimed_ms={reclaimed:.2f}")
+
+    # -- the serving spine: capture ONCE, replay under every policy ------
+    regions = SV.make_serve_regions(cfg, mesh, params,
+                                    ledger=Ledger("serve_bench"))
+    prefill_prog = SV.capture_prefill_program(
+        regions, batch_in, T.init_cache(cfg, batch, max_len))
+    tok_ex, cache_ex = prefill_prog.replay(
+        Executor(lm_policy("unified", cfg.memory), Ledger("warm")),
+        batch_in, T.init_cache(cfg, batch, max_len))
+    decode_prog = SV.capture_decode_program(regions, prompt_len, gen,
+                                            tok_ex, cache_ex)
+    reports = {}
+    policies = (
+        ("unified", lambda: lm_policy("unified", cfg.memory)),
+        ("discrete", lambda: lm_policy("discrete", cfg.memory)),
+        ("offload_kv", lambda: lm_policy("unified", cfg.memory,
+                                         placer=SV.offload_kv_cache())),
+    )
+    for name, make_pol in policies:
+        ex = Executor(make_pol(), Ledger(f"serve_{name}"))
+        tok, cache = prefill_prog.replay(ex, batch_in,
+                                         T.init_cache(cfg, batch, max_len))
+        decode_prog.replay(ex, tok, cache)          # warm per-target caches
+        ex.ledger.reset_timings()
+        t0 = time.perf_counter()
+        toks = decode_prog.replay(ex, tok, cache)
+        t_decode = time.perf_counter() - t0
+        seq = np.asarray(jnp.stack(toks, axis=1))
+        # capture changes the schedule, never the tokens: every policy's
+        # sequence must match the pre-capture jit path bit-for-bit
+        np.testing.assert_array_equal(seq, seq_ref, err_msg=name)
+        rep = ex.report()
+        reports[name] = rep
+        row(f"fig_serve/{name}", t_decode * 1e6 / gen,
+            f"device_fraction={rep['device_fraction']:.3f}"
+            f";staging_fraction={rep['staging_fraction']:.3f}"
+            f";impl_counts={'+'.join(f'{k}:{v}' for k, v in sorted(rep['impl_counts'].items()))}"
+            f";parity=exact")
+    out = Path(out_json)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(
+        {"batch": batch, "prompt_len": prompt_len, "gen": gen,
+         "stream_ms": stream_ms, "reclaimed_ms": reclaimed,
+         "reports": reports}, indent=1, default=str))
+    print(f"[bench] wrote serve reports to {out}", flush=True)
+    return reports
+
+
 def pool_bench(n: int = 200, shape=(1 << 20,)):
     """Umpire pooling (paper §5): alloc+touch latency, pooled vs malloc."""
     from repro.core.pool import HostStagingPool
@@ -304,14 +412,25 @@ def pool_bench(n: int = 200, shape=(1 << 20,)):
 
 
 def dispatch_bench():
-    """TARGET_CUT_OFF calibration (listings 4-6); the chosen cutoff is
-    recorded with the region's ledger row."""
-    from repro.core.dispatch import TargetDispatch
-    td = TargetDispatch(lambda x: x * 2.0 + 1.0, name="saxpy")
-    cut = td.calibrate(lambda n: (jnp.ones(n),),
-                       sizes=(256, 1024, 4096, 16384, 65536, 262144))
-    recorded = td.ledger.coverage_report()["cutoffs"]
-    row("dispatch/target_cutoff", 0.0, f"cutoff={cut};ledger={recorded}")
+    """TARGET_CUT_OFF calibration (listings 4-6) on the regions API — a
+    Region driven by AdaptivePolicy; the chosen cutoff is recorded with
+    the region's ledger row and the routing decisions land in the same
+    coverage report as staging fractions."""
+    from repro.core.ledger import Ledger
+    from repro.core.regions import AdaptivePolicy, Executor, region
+    ldg = Ledger("dispatch")
+    saxpy = region("saxpy", ledger=ldg)(lambda x: x * 2.0 + 1.0)
+    pol = AdaptivePolicy()
+    cut = pol.calibrate(saxpy, lambda n: (jnp.ones(n),),
+                        sizes=(256, 1024, 4096, 16384, 65536, 262144),
+                        ledger=ldg)
+    ex = Executor(pol, ldg)
+    ex.run(saxpy, jnp.ones(max(cut // 2, 1)))     # below cutoff -> host
+    ex.run(saxpy, jnp.ones(2 * cut))              # above cutoff -> device
+    rep = ldg.coverage_report()
+    row("dispatch/target_cutoff", 0.0,
+        f"cutoff={cut};ledger={rep['cutoffs']}"
+        f";host_calls={rep['host_calls']};device_calls={rep['device_calls']}")
 
 
 def kernel_bench(grid=(64, 64, 64), reps: int = 20):
@@ -422,6 +541,7 @@ BENCHES = {
     "fig_scaling": fig_scaling,
     "fig_variants": fig_variants,
     "fig4_coverage": fig4_coverage,
+    "fig_serve": fig_serve,
     "pool": pool_bench,
     "dispatch": dispatch_bench,
     "kernel": kernel_bench,

@@ -1,5 +1,7 @@
 """Batched serving example: prefill + greedy decode on the gemma3 family,
-with the KV cache optionally placed in host memory (unified address space).
+on the region-program spine — the second run offloads the KV cache to host
+memory by policy (a role-keyed Placer, unified address space) and prints
+the canonical coverage_report() (--report).
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -9,4 +11,4 @@ if __name__ == "__main__":
     main(["--arch", "gemma3-1b", "--reduced", "--batch", "4",
           "--prompt-len", "32", "--gen", "32"])
     main(["--arch", "recurrentgemma-9b", "--reduced", "--batch", "4",
-          "--prompt-len", "32", "--gen", "32", "--offload-kv"])
+          "--prompt-len", "32", "--gen", "32", "--offload-kv", "--report"])

@@ -3,6 +3,8 @@
 Format: one directory per step —
   manifest.json   step, logical tree structure, leaf shapes/dtypes
   <i>.npy         one file per leaf (full logical array)
+  coverage.json   optional coverage_report() snapshot (save(report=...)):
+                  the region/offload accounting that produced the weights
 
 Design points for the 1000+-node posture:
 * **Mesh-agnostic**: leaves are saved as full logical arrays with their
@@ -49,7 +51,12 @@ class Checkpointer:
         self._worker: Optional[threading.Thread] = None
 
     # -- save -----------------------------------------------------------
-    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> None:
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             report: Optional[dict] = None) -> None:
+        """``report`` (optional) is a ``coverage_report()``-style dict
+        snapshotted to ``coverage.json`` inside the step directory — the
+        offload/staging/variant accounting that produced these weights
+        travels with them (paper C2: coverage is part of the artifact)."""
         self.wait()
         # stage to host memory space (zero-copy on unified memory; one DMA
         # per buffer otherwise), then serialize off-thread
@@ -61,7 +68,7 @@ class Checkpointer:
         host_tree = jax.tree.map(lambda x: np.asarray(x), staged)
 
         def work():
-            self._write(step, host_tree, extra or {})
+            self._write(step, host_tree, extra or {}, report)
 
         if self.async_save:
             self._worker = threading.Thread(target=work, daemon=True)
@@ -69,7 +76,8 @@ class Checkpointer:
         else:
             work()
 
-    def _write(self, step: int, host_tree, extra: dict) -> None:
+    def _write(self, step: int, host_tree, extra: dict,
+               report: Optional[dict] = None) -> None:
         tmp = self.dir / f"step_{step:010d}.tmp"
         final = self.dir / f"step_{step:010d}"
         if tmp.exists():
@@ -91,6 +99,8 @@ class Checkpointer:
                 {"path": p, "file": f"{i}.npy", "shape": list(arr.shape),
                  "dtype": dtype_name})
         (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if report is not None:
+            (tmp / "coverage.json").write_text(json.dumps(report, indent=1))
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)

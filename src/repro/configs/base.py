@@ -50,7 +50,12 @@ class MemoryPolicy:
     offload_kv_spill: bool = False
     kv_hot_window: int = 8192
     pool_min_elems: int = 5120
-    target_cutoff: int = 16384    # TARGET_CUT_OFF analogue for TargetDispatch
+    # the SizeRouter threshold — the paper's empirical TARGET_CUT_OFF as a
+    # config value: under `--policy adaptive` the serve/train drivers build
+    # AdaptivePolicy(cutoff=target_cutoff) (repro.launch.policy.lm_policy),
+    # so calls whose largest operand exceeds it route to the device
+    # executable and smaller ones stay on host (paper C3, listings 4-6)
+    target_cutoff: int = 16384
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,20 +6,20 @@ C3 adaptive switch -> repro.core.regions    (SizeRouter / AdaptivePolicy)
 C4 memory pooling  -> repro.core.pool       (HostStagingPool, DeviceBufferPool)
 §5 measurement     -> repro.core.regions    (Unified/Discrete/Host policies)
 
-``repro.core.regions`` is the canonical API: Region (with named
-implementation variants, OpenMP ``declare variant``) + ExecutionPolicy
-(placement x routing x staging x selection) run by one Executor.  ``executors`` and
-``dispatch`` re-export deprecated shims over it.  ``repro.core.program``
-layers captured region programs on top: record one step, replay it under
-any policy with lookahead staging overlap (AsyncExecutor) or vmapped over
-N independent instances (RegionProgram.replay_batch).
-``repro.core.shard_program`` scales a captured program across a mesh of
-simulated APUs: domain-decomposed replay with explicit halo-exchange
-regions and per-device ledgers aggregated into one node report.
+``repro.core.regions`` is the canonical API — and the ONLY offload path in
+the repo: Region (with named implementation variants, OpenMP ``declare
+variant``) + ExecutionPolicy (placement x routing x staging x selection)
+run by one Executor.  The pre-regions ``executors`` and ``dispatch``
+modules are retired deprecation-alias stubs, no longer exported here and
+never imported internally (``tools/check_retired_imports.py`` gates it in
+CI).  ``repro.core.program`` layers captured region programs on top:
+record one step, replay it under any policy with lookahead staging overlap
+(AsyncExecutor) or vmapped over N independent instances
+(RegionProgram.replay_batch).  ``repro.core.shard_program`` scales a
+captured program across a mesh of simulated APUs: domain-decomposed replay
+with explicit halo-exchange regions and per-device ledgers aggregated into
+one node report.
 """
-from repro.core.dispatch import DispatchStats, TargetDispatch, offload
-from repro.core.executors import (DiscreteExecutor, HostExecutor,
-                                  UnifiedExecutor, make_executor)
 from repro.core.ledger import GLOBAL_LEDGER, Ledger, RegionRecord, offload_region
 from repro.core.pool import (BufferRotation, DeviceBufferPool,
                              HostStagingPool, POOL_MIN_ELEMS, PoolStats)

@@ -1,136 +1,64 @@
-"""Adaptive host/device dispatch — the ``if(target: n > TARGET_CUT_OFF)``
-OpenMP clause (paper C3, listings 4-6).
+"""RETIRED module — deprecation-alias stub only.
 
-The routing logic itself now lives in ``repro.core.regions``
-(:class:`SizeRouter` / :class:`AdaptivePolicy`), where it composes with any
-executor's placement and staging axes.  :class:`TargetDispatch` survives as
-a standalone shim — one Region driven by one AdaptivePolicy executor — and
-its per-call accounting lands in a :class:`~repro.core.ledger.Ledger`
-instead of a private stats object, so host/device call counts show up in
-the same ``coverage_report()`` as staging fractions.  Counts only: like
-the pre-regions dispatcher, ``__call__`` stays asynchronous (no
-block_until_ready), so it cannot time itself — run the region through an
-``Executor(AdaptivePolicy(...))`` when timed coverage is wanted.
+The ``TargetDispatch`` / ``offload`` / ``DispatchStats`` shims that lived
+here were deleted: the ``if(target: n > TARGET_CUT_OFF)`` clause (paper C3,
+listings 4-6) is the :class:`~repro.core.regions.SizeRouter` routing axis,
+run *inside* any executor as :class:`~repro.core.regions.AdaptivePolicy`,
+and the per-call host/device accounting that ``DispatchStats`` held lives
+on :class:`~repro.core.ledger.RegionRecord` rows
+(``host_calls``/``device_calls``/``host_elems``/``device_elems``).
 
-``calibrate()`` reproduces the paper's empirical choice of TARGET_CUT_OFF
-by timing both executables over a size ladder, picking the crossover, and
-recording it with the region's ledger row.
+Migration (see ARCHITECTURE.md, "Migration notes"):
+
+    td = TargetDispatch(f, cutoff)   ->  r = region("f")(f)
+    td(x)                                 ex = Executor(AdaptivePolicy(cutoff))
+                                          ex.run(r, x)
+    td.calibrate(make_args)          ->  AdaptivePolicy.calibrate(r, make_args)
+    td.stats                         ->  ex.ledger.regions[r.name] /
+                                         ex.report() (coverage_report schema)
+
+Nothing in this repo imports this module anymore (CI enforces that via
+``tools/check_retired_imports.py``); it exists only so external pre-regions
+code fails loudly with directions instead of an ImportError.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional, Sequence
+import warnings
 
-from repro.core.ledger import Ledger
-from repro.core.regions import (DEFAULT_CUTOFF, AdaptivePolicy, Executor,
-                                default_size, region as _region)
+from repro.core.regions import (DEFAULT_CUTOFF, AdaptivePolicy, Executor,  # noqa: F401
+                                SizeRouter, default_size, region)
 
-# legacy alias; sizing now uses the LARGEST leaf, so a scalar first argument
-# no longer forces host routing regardless of field size
+#: old alias for the old alias — kept because the sizing rule genuinely moved
 _default_size = default_size
 
 
-@dataclasses.dataclass
-class DispatchStats:
-    """Deprecated read-only view assembled from the ledger's RegionRecord
-    (routing accounting was folded into the Ledger)."""
-    host_calls: int = 0
-    device_calls: int = 0
-    host_elems: int = 0
-    device_elems: int = 0
-
-    @property
-    def offload_fraction(self) -> float:
-        tot = self.host_elems + self.device_elems
-        return self.device_elems / tot if tot else 0.0
-
-
-class TargetDispatch:
-    """``TargetDispatch(f, cutoff)(x)`` == OpenMP
-    ``target teams distribute parallel for if(target: x.size > cutoff)``.
-
-    Shim over ``Executor(AdaptivePolicy(cutoff), ledger)`` running a single
-    Region; pass ``ledger=`` to land its routing decisions in a shared
-    coverage report."""
-
-    def __init__(self, fn: Callable, cutoff: int = DEFAULT_CUTOFF,
-                 size_fn: Callable = None, name: Optional[str] = None,
-                 ledger: Optional[Ledger] = None):
-        rname = name or getattr(fn, "__name__", "region")
-        self.ledger = ledger or Ledger(f"dispatch:{rname}")
-        self.region = _region(rname, ledger=self.ledger,
-                              size_fn=size_fn)(fn)
-        self.policy = AdaptivePolicy(cutoff=cutoff)
-        self.executor = Executor(self.policy, self.ledger)
-        self.name = self.region.name
-
-    @property
-    def cutoff(self) -> int:
-        return self.policy.cutoff
-
-    @cutoff.setter
-    def cutoff(self, value: int) -> None:
-        self.policy.cutoff = value
-
-    @property
-    def size_fn(self) -> Callable:
-        return self.region.size_fn
-
-    @size_fn.setter
-    def size_fn(self, fn: Callable) -> None:
-        # forward to the region so post-construction overrides keep routing
-        # (the pre-regions implementation read self.size_fn on every call)
-        self.region.size_fn = fn or default_size
-
-    @property
-    def stats(self) -> DispatchStats:
-        """Snapshot of the ledger row (a fresh object per access — hold the
-        dispatcher, not a stats reference, to observe updates)."""
-        r = self.ledger.regions.get(self.region.name)
-        if r is None:                      # pragma: no cover
-            return DispatchStats()
-        return DispatchStats(host_calls=r.host_calls,
-                             device_calls=r.device_calls,
-                             host_elems=r.host_elems,
-                             device_elems=r.device_elems)
-
-    @stats.setter
-    def stats(self, value: DispatchStats) -> None:
-        # the old reset idiom `td.stats = DispatchStats()` writes through
-        # to the ledger row
-        r = self.ledger.region(self.region.name)
-        r.host_calls = value.host_calls
-        r.device_calls = value.device_calls
-        r.host_elems = value.host_elems
-        r.device_elems = value.device_elems
-        r.calls = value.host_calls + value.device_calls
-
-    def __call__(self, *args, **kwargs):
-        # routing + counts only, no block_until_ready: like the pre-regions
-        # dispatcher, calls stay asynchronous so back-to-back dispatched ops
-        # overlap; use `self.executor.run(self.region, ...)` for timed runs
-        r = self.region
-        n = r.size_fn(args, kwargs)
-        tgt = self.policy.router.target(r, args, kwargs, size=n)
-        out = r.executable(tgt)(*args, **kwargs)
-        self.ledger.record(r.name, device=(tgt == "device"),
-                           offloaded=r.offloaded, compute_s=0.0, elems=n)
-        return out
-
-    # ------------------------------------------------------------------
-    def calibrate(self, make_args: Callable[[int], tuple],
-                  sizes: Sequence[int] = (256, 1024, 4096, 16384, 65536),
-                  reps: int = 20) -> int:
-        """Time host vs device executables per size; set cutoff = crossover
-        and record it into the ledger."""
-        return self.policy.calibrate(self.region, make_args, sizes=sizes,
-                                     reps=reps, ledger=self.ledger)
-
-
-def offload(fn=None, *, cutoff: int = DEFAULT_CUTOFF, size_fn=None, name=None,
-            ledger=None):
-    """Decorator form: the one-line directive of listings 4-6."""
+def offload(fn=None, *, cutoff=None, size_fn=None, name=None, ledger=None):
+    """Deprecated decorator spelling of listings 4-6 (both the bare
+    ``@offload`` and the ``@offload(cutoff=...)`` forms).  Returns a
+    Region, not a self-routing TargetDispatch: ``cutoff`` is accepted for
+    signature compatibility but routing now lives on the policy — run the
+    region through ``Executor(AdaptivePolicy(cutoff))``."""
     def wrap(f):
-        return TargetDispatch(f, cutoff=cutoff, size_fn=size_fn, name=name,
-                              ledger=ledger)
+        return region(name or getattr(f, "__name__", "region"),
+                      size_fn=size_fn, ledger=ledger)(f)
     return wrap(fn) if fn is not None else wrap
+
+
+warnings.warn(
+    "repro.core.dispatch is retired: use repro.core.regions "
+    "(Region + Executor(AdaptivePolicy(cutoff)))", DeprecationWarning,
+    stacklevel=2)
+
+_RETIRED = {
+    "TargetDispatch": "Region + Executor(AdaptivePolicy(cutoff)) "
+                      "[repro.core.regions]",
+    "DispatchStats": "Ledger rows: RegionRecord.host_calls/device_calls/"
+                     "host_elems/device_elems [repro.core.ledger]",
+}
+
+
+def __getattr__(name: str):
+    if name in _RETIRED:
+        raise AttributeError(
+            f"repro.core.dispatch.{name} was removed; use {_RETIRED[name]}")
+    raise AttributeError(name)

@@ -1,67 +1,53 @@
-"""Deprecated execution-mode shims (paper §5, Figs 5-6).
+"""RETIRED module — deprecation-alias stub only.
 
-The three §5 execution modes — APU / managed-memory dGPU / dCPU — now live
-in ``repro.core.regions`` as :class:`ExecutionPolicy` instances
-(``UnifiedPolicy`` / ``DiscretePolicy`` / ``HostPolicy``) run by one
-:class:`~repro.core.regions.Executor`.  This module keeps the old class
-names and ``make_executor`` as thin shims so pre-regions call sites keep
-working; new code should construct ``Executor(UnifiedPolicy(), ledger)``
-directly.
+The pre-regions executor *classes* are gone; the three §5 execution modes
+are :class:`ExecutionPolicy` instances (``UnifiedPolicy`` /
+``DiscretePolicy`` / ``HostPolicy``) run by the one
+:class:`~repro.core.regions.Executor`.  The names below are plain alias
+functions constructing exactly that, so external pre-regions call sites
+keep working one more release; nothing in this repo imports this module
+(CI enforces it via ``tools/check_retired_imports.py``).
 
-Return contract (uniform across modes): ``run`` returns jax Arrays.  The
-old ``DiscreteExecutor`` returned numpy, silently changing downstream types
-per mode; the discrete *policy* instead stages results into host-space jax
-Arrays — same host-memory semantics, one type contract.
+Migration (see ARCHITECTURE.md, "Migration notes"):
+
+    UnifiedExecutor(ldg)        ->  Executor(UnifiedPolicy(), ldg)
+    DiscreteExecutor(ldg, a, p) ->  Executor(DiscretePolicy(arena=a,
+                                             device_pool=p), ldg)
+    HostExecutor(ldg)           ->  Executor(HostPolicy(), ldg)
+    make_executor(mode)         ->  Executor(make_policy(mode))
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 from repro.core.ledger import Ledger
-from repro.core.pool import DeviceBufferPool
 from repro.core.regions import (DiscretePolicy, Executor, HostPolicy,
                                 UnifiedPolicy, make_policy)
-from repro.core.umem import UnifiedArena
 
-BaseExecutor = Executor          # deprecated alias
+warnings.warn(
+    "repro.core.executors is retired: construct "
+    "Executor(<Policy>(), ledger) from repro.core.regions",
+    DeprecationWarning, stacklevel=2)
 
-
-class UnifiedExecutor(Executor):
-    """Deprecated shim: ``Executor(UnifiedPolicy(), ledger)``."""
-
-    def __init__(self, ledger: Optional[Ledger] = None):
-        super().__init__(UnifiedPolicy(), ledger)
+BaseExecutor = Executor
 
 
-class HostExecutor(Executor):
-    """Deprecated shim: ``Executor(HostPolicy(), ledger)``."""
-
-    def __init__(self, ledger: Optional[Ledger] = None):
-        super().__init__(HostPolicy(), ledger)
+def UnifiedExecutor(ledger: Optional[Ledger] = None) -> Executor:
+    return Executor(UnifiedPolicy(), ledger)
 
 
-class DiscreteExecutor(Executor):
-    """Deprecated shim: ``Executor(DiscretePolicy(...), ledger)``."""
-
-    def __init__(self, ledger: Optional[Ledger] = None,
-                 arena: Optional[UnifiedArena] = None,
-                 pool: Optional[DeviceBufferPool] = None):
-        policy = DiscretePolicy(arena=arena, device_pool=pool)
-        super().__init__(policy, ledger)
-        self.arena = policy.arena
-        self.pool = policy.stager.device_pool
+def HostExecutor(ledger: Optional[Ledger] = None) -> Executor:
+    return Executor(HostPolicy(), ledger)
 
 
-EXECUTORS = {
-    "unified": UnifiedExecutor,
-    "discrete": DiscreteExecutor,
-    "host": HostExecutor,
-}
+def DiscreteExecutor(ledger: Optional[Ledger] = None, arena=None,
+                     pool=None) -> Executor:
+    return Executor(DiscretePolicy(arena=arena, device_pool=pool), ledger)
 
 
 def make_executor(mode: str, **kw) -> Executor:
-    """Deprecated: prefer ``Executor(make_policy(mode), ledger)``."""
-    if mode in EXECUTORS:
-        return EXECUTORS[mode](**kw)
     ledger = kw.pop("ledger", None)
+    if "pool" in kw:                 # old DiscreteExecutor parameter name
+        kw["device_pool"] = kw.pop("pool")
     return Executor(make_policy(mode, **kw), ledger)

@@ -486,7 +486,9 @@ class AsyncExecutor:
                     # bank drains at the end)
                     args, kwargs = pol.placer.place_args(r, args, kwargs)
                 t0 = time.perf_counter()
-                out = r.executable(tgt, impl)(*args, **kwargs)
+                # staging policy: non-donating executables only (staged
+                # operands may alias pooled pages the stager still owns)
+                out = r.executable(tgt, impl, donate=False)(*args, **kwargs)
                 # submit the NEXT op's prefetch before blocking on this
                 # compute — this ordering is the entire overlap
                 if k + 1 < len(prog.ops):

@@ -16,8 +16,8 @@ abstraction:
     expressed as ``MemSpace`` hints applied through ``umem`` (paper C1);
   - **routing** (:class:`Router`): which executable runs this call — the
     static host/device choice of the three §5 execution modes, or the
-    size-based ``TARGET_CUT_OFF`` clause absorbed from
-    ``repro.core.dispatch`` (paper C3, listings 4-6);
+    size-based ``TARGET_CUT_OFF`` clause of the retired dispatch shim
+    (paper C3, listings 4-6);
   - **staging** (:class:`Stager`): what crossing the host/device boundary
     costs — nothing on an APU, real out-of-place copies through pooled
     buffers on a managed-memory dGPU (paper §5 Fig 6, C4);
@@ -37,8 +37,10 @@ abstraction:
   staging fractions appear in the same ``coverage_report()``.
 
 The old ``UnifiedExecutor`` / ``DiscreteExecutor`` / ``HostExecutor``
-classes and ``TargetDispatch`` survive as thin shims over policy instances
-(see ``repro.core.executors`` and ``repro.core.dispatch``).
+classes and ``TargetDispatch`` are RETIRED: the pre-regions ``executors``
+and ``dispatch`` modules are deprecation-alias stubs for external callers
+only, and nothing inside the repo imports them (CI gates it via
+``tools/check_retired_imports.py``).
 """
 from __future__ import annotations
 
@@ -104,7 +106,10 @@ class Region:                           # hashable, usable as dict/set keys
 
     ``arg_spaces`` maps positional index or keyword name to a
     :class:`MemSpace` placement hint; ``result_space`` hints where results
-    should land.  Hints are *advisory*: the executing policy's placement
+    should land — either one :class:`MemSpace` for the whole result, or a
+    mapping from top-level tuple index / dict key to a space so a region
+    returning ``(params, opt_state, gnorm)`` can pin just ``opt_state``
+    host-side.  Hints are *advisory*: the executing policy's placement
     axis decides whether (and above what byte threshold) to honor them.
 
     ``stencil`` declares the region's neighbor-access pattern as a sequence
@@ -116,15 +121,27 @@ class Region:                           # hashable, usable as dict/set keys
     optionally narrows the exchange to the top-level arguments (positions
     or parameter names) whose *neighbors* the stencil actually reads —
     coefficient stacks multiply locally and need no halo.
+
+    ``donate_args`` lists positional arguments donated to XLA
+    (``jax.jit(donate_argnums=...)``): the output may alias the input's
+    storage instead of copying — how a pass-through region (serve's
+    ``KV_APPEND`` cache commit) stays O(1) instead of O(bytes).  Donate
+    only when the region is the LAST consumer of that argument everywhere
+    it appears (capture executes eagerly and deletes donated buffers
+    too).  Executors running under a staging policy automatically fall
+    back to non-donating executables (``executable(donate=False)``):
+    staged operands can alias pooled pages whose lifetime the stager
+    manages, and donation must never hand pool-owned storage to XLA.
     """
     name: str
     fn: Callable
     offloaded: bool = True
     size_fn: Callable = default_size
     arg_spaces: Optional[Mapping[Any, MemSpace]] = None
-    result_space: Optional[MemSpace] = None
+    result_space: Any = None      # MemSpace | {tuple index / dict key: MemSpace}
     stencil: Optional[Sequence[Tuple[int, int]]] = None
     halo_args: Optional[Sequence[Any]] = None
+    donate_args: Optional[Sequence[int]] = None
     ledger: Ledger = dataclasses.field(default_factory=lambda: GLOBAL_LEDGER)
 
     def __post_init__(self):
@@ -170,7 +187,8 @@ class Region:                           # hashable, usable as dict/set keys
             if name == "ref":                   # ref IS the base function
                 self.fn = f
                 self._jitted = None
-            self._jvar.pop(name, None)          # drop stale compilations
+            for key in [k for k in self._jvar if k[0] == name]:
+                del self._jvar[key]             # drop stale compilations
             for key in [k for k in self._exec if k[1] == name]:
                 del self._exec[key]
             return f
@@ -190,22 +208,37 @@ class Region:                           # hashable, usable as dict/set keys
         return name if name in self._variants else "ref"
 
     # -- per-(target, variant) compiled executables ----------------------
+    def _jit(self, fn: Callable) -> Callable:
+        return jax.jit(fn, donate_argnums=tuple(self.donate_args or ()))
+
     @property
     def jitted(self):
         """The target-agnostic jitted ref executable (legacy shim
         attribute; prefer :meth:`jitted_variant`)."""
         if self._jitted is None:
-            self._jitted = jax.jit(self.fn)
+            self._jitted = self._jit(self.fn)
         return self._jitted
 
-    def jitted_variant(self, name: str = "ref") -> Callable:
+    def jitted_variant(self, name: str = "ref",
+                       donate: bool = True) -> Callable:
         """The target-agnostic jitted executable of one variant (unknown
-        names fall back to ``ref``, like :meth:`executable`)."""
+        names fall back to ``ref``, like :meth:`executable`).
+
+        ``donate=False`` compiles without buffer donation even when the
+        region declares ``donate_args`` — the form staging executors and
+        calibration loops (which re-call with the same arguments) use."""
         name = self.resolve(name)
-        j = self._jvar.get(name)
+        dflag = bool(donate and self.donate_args)
+        key = (name, dflag)
+        j = self._jvar.get(key)
         if j is None:
-            j = self.jitted if name == "ref" else jax.jit(self.impl_fn(name))
-            self._jvar[name] = j
+            if name == "ref" and dflag == bool(self.donate_args):
+                j = self.jitted          # donating exactly like _jit(fn)
+            elif dflag:
+                j = self._jit(self.impl_fn(name))
+            else:
+                j = jax.jit(self.impl_fn(name))
+            self._jvar[key] = j
         return j
 
     @property
@@ -213,19 +246,21 @@ class Region:                           # hashable, usable as dict/set keys
         """Legacy shim attribute; prefer ``.name``."""
         return self.name
 
-    def executable(self, target: str = "default",
-                   impl: str = "ref") -> Callable:
+    def executable(self, target: str = "default", impl: str = "ref",
+                   donate: bool = True) -> Callable:
         """The compiled executable for one (routing target, variant) pair.
 
         ``default`` runs wherever operands already live (the APU model);
         ``host``/``device`` pin the call to that backend — the two
         executables of the paper's ``if(target: ...)`` clause.  ``impl``
         names a registered variant (unknown names fall back to ``ref``,
-        the declare-variant base-function rule)."""
+        the declare-variant base-function rule).  ``donate=False``
+        disables ``donate_args`` for this executable (staging executors,
+        calibration loops)."""
         impl = self.resolve(impl)
-        key = (target, impl)
+        key = (target, impl, bool(donate and self.donate_args))
         if key not in self._exec:
-            jfn = self.jitted_variant(impl)
+            jfn = self.jitted_variant(impl, donate=donate)
             if target == "default":
                 call = jfn
             else:
@@ -267,10 +302,11 @@ class Region:                           # hashable, usable as dict/set keys
         r.result_space = None
         r.stencil = None
         r.halo_args = None
+        r.donate_args = None
         r.ledger = GLOBAL_LEDGER
         r._jitted = getattr(obj, "jitted", None) or jax.jit(obj)
         r._variants = {"ref": obj}
-        r._jvar = {"ref": r._jitted}
+        r._jvar = {("ref", False): r._jitted}
         r._exec = {}
         r.__name__ = getattr(obj, "__name__", "region")
         r.__qualname__ = r.__name__
@@ -311,9 +347,10 @@ def as_region(obj) -> Region:
 def region(name: Optional[str] = None, *, offloaded: bool = True,
            ledger: Optional[Ledger] = None, size_fn: Optional[Callable] = None,
            placement: Optional[Mapping[Any, MemSpace]] = None,
-           result_space: Optional[MemSpace] = None,
+           result_space: Any = None,
            stencil: Optional[Sequence[Tuple[int, int]]] = None,
-           halo_args: Optional[Sequence[Any]] = None):
+           halo_args: Optional[Sequence[Any]] = None,
+           donate_args: Optional[Sequence[int]] = None):
     """Decorator: mark a function as one offloadable region (listings 4-6).
 
         @region("Amul", placement={0: MemSpace.DEVICE},
@@ -326,6 +363,7 @@ def region(name: Optional[str] = None, *, offloaded: bool = True,
                       size_fn=size_fn or default_size,
                       arg_spaces=placement, result_space=result_space,
                       stencil=stencil, halo_args=halo_args,
+                      donate_args=donate_args,
                       ledger=ledger or GLOBAL_LEDGER)
     return wrap
 
@@ -357,7 +395,8 @@ class StaticRouter:
 @dataclasses.dataclass
 class SizeRouter:
     """The ``if(target: n > TARGET_CUT_OFF)`` clause (paper C3), absorbed
-    from ``dispatch.TargetDispatch`` so it can run *inside* any executor."""
+    from the retired ``TargetDispatch`` shim so it runs *inside* any
+    executor."""
     cutoff: int = DEFAULT_CUTOFF
 
     def target(self, region: Region, args, kwargs,
@@ -537,10 +576,24 @@ class Placer:
         return tuple(args), kwargs
 
     def place_result(self, region: Region, out):
-        if self.honor_hints and region.result_space is not None:
-            return umem.tree_place(out, region.result_space,
-                                   min_bytes=self.min_bytes)
-        return out
+        if not (self.honor_hints and region.result_space is not None):
+            return out
+        rs = region.result_space
+        if isinstance(rs, Mapping):
+            # keyed form: place only the named top-level result elements
+            if isinstance(out, tuple):
+                placed = list(out)
+                for key, space in rs.items():
+                    if isinstance(key, int) and 0 <= key < len(placed):
+                        placed[key] = umem.tree_place(
+                            placed[key], space, min_bytes=self.min_bytes)
+                return tuple(placed)
+            if isinstance(out, dict):
+                return {k: umem.tree_place(v, rs[k],
+                                           min_bytes=self.min_bytes)
+                        if k in rs else v for k, v in out.items()}
+            return out
+        return umem.tree_place(out, rs, min_bytes=self.min_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -646,7 +699,9 @@ class AutotuneSelector:
                 args = make_args(n)
                 best, best_t = "ref", float("inf")
                 for name in r.variants:
-                    ex = r.executable(tgt, name)
+                    # donate=False: the timing loop re-calls with the same
+                    # argument buffers
+                    ex = r.executable(tgt, name, donate=False)
                     out = ex(*args)
                     jax.block_until_ready(out)          # compile + warm
                     t0 = time.perf_counter()
@@ -775,7 +830,7 @@ class AdaptivePolicy(ComposedPolicy):
             args = make_args(n)
             ts = {}
             for tgt in ("host", "device"):
-                ex = r.executable(tgt)
+                ex = r.executable(tgt, donate=False)
                 out = ex(*args)
                 jax.block_until_ready(out)
                 t0 = time.perf_counter()
@@ -856,7 +911,10 @@ class Executor:
             staging_s += s
             staging_b += b
         t0 = time.perf_counter()
-        out = r.executable(tgt, impl)(*args, **kwargs)
+        # donation is disabled under staging policies: staged operands may
+        # alias pooled pages whose lifetime the stager manages
+        out = r.executable(tgt, impl,
+                           donate=not pol.stager.stages)(*args, **kwargs)
         jax.block_until_ready(out)
         compute_s = time.perf_counter() - t0
         if stage:

@@ -343,7 +343,10 @@ class ShardExecutor:
             raw, exchange_s, exchange_bytes_dev = self._exchange(op, raw)
             args, kwargs = jax.tree.unflatten(op.in_tree, raw)
             t0 = time.perf_counter()
-            out = r.jitted_variant(impl)(*args, **kwargs)
+            # donate=False: sharded operands may be pool-staged or reused
+            # by the exchange bookkeeping — donation is a single-device
+            # executor optimization
+            out = r.jitted_variant(impl, donate=False)(*args, **kwargs)
             jax.block_until_ready(out)
             compute_s = time.perf_counter() - t0
             if staging and r.offloaded:
@@ -380,7 +383,7 @@ class ShardExecutor:
         impl = r.resolve(policy_selector(self.policy).select(
             r, "host", args, kwargs, size=n))
         t0 = time.perf_counter()
-        out = r.executable("host", impl)(*args, **kwargs)
+        out = r.executable("host", impl, donate=False)(*args, **kwargs)
         jax.block_until_ready(out)
         self.host_ledger.record(self._row_name(r), device=False,
                                 offloaded=r.offloaded,

@@ -53,11 +53,25 @@ def preferred_host_space(device=None) -> Optional[MemSpace]:
 
 def place(x, space: MemSpace, device=None):
     """Move one array to a memory space (no-op if already there or if the
-    platform does not expose that space)."""
+    platform does not expose that space).
+
+    A sharded array (NamedSharding etc.) keeps its partitioning — only the
+    memory kind is rebound, so placing FSDP-sharded optimizer moments or a
+    mesh-scattered KV cache into host space never gathers onto one device.
+    Unsharded inputs land on ``device`` (default: the first device)."""
     d = device or jax.devices()[0]
     if space.kind not in supported_spaces(d):
         return x
-    sh = jax.sharding.SingleDeviceSharding(d, memory_kind=space.kind)
+    sh = None
+    cur = getattr(x, "sharding", None)
+    if cur is not None and \
+            not isinstance(cur, jax.sharding.SingleDeviceSharding):
+        try:
+            sh = cur.with_memory_kind(space.kind)
+        except Exception:               # shardings without memory kinds
+            sh = None
+    if sh is None:
+        sh = jax.sharding.SingleDeviceSharding(d, memory_kind=space.kind)
     return jax.device_put(x, sh)
 
 

@@ -1,0 +1,40 @@
+"""ExecutionPolicy construction for the LM drivers (train / serve).
+
+One place where a CLI ``--policy`` choice plus the config's declarative
+:class:`~repro.configs.base.MemoryPolicy` become a concrete
+:class:`~repro.core.regions.ExecutionPolicy`:
+
+* ``adaptive`` threads ``MemoryPolicy.target_cutoff`` into the
+  :class:`~repro.core.regions.SizeRouter` — the paper's ``TARGET_CUT_OFF``
+  as a config value, not a magic number in driver code;
+* every mode gets a ``min_bytes``-gated Placer so placement hints (the
+  optimizer-offload hint on ``ADAMW_UPDATE``, serve's role-keyed KV
+  placer) never bounce scalars across memory spaces;
+* callers may swap in a custom ``placer`` (serve's ``--offload-kv``) or
+  ``selector`` (variant dispatch) — the two axes the drivers expose.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import MemoryPolicy
+from repro.core.regions import ComposedPolicy, Placer, make_policy
+
+#: placement hints skip leaves below this (moving a scalar across spaces
+#: costs more than it saves — paper C4's threshold idea applied to C1)
+PLACER_MIN_BYTES = 4096
+
+#: the CLI surface both drivers expose
+POLICY_CHOICES = ("unified", "discrete", "host", "adaptive")
+
+
+def lm_policy(mode: str, memory: Optional[MemoryPolicy] = None, *,
+              placer: Optional[Placer] = None,
+              selector=None) -> ComposedPolicy:
+    """Build the ExecutionPolicy one LM driver run executes under."""
+    kw = {"placer": placer or Placer(min_bytes=PLACER_MIN_BYTES)}
+    if selector is not None:
+        kw["selector"] = selector
+    if mode == "adaptive" and memory is not None:
+        kw["cutoff"] = memory.target_cutoff
+    return make_policy(mode, **kw)

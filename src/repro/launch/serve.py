@@ -1,18 +1,38 @@
-"""Batched serving driver: prefill + decode with KV-cache management.
+"""Batched serving driver — prefill + decode on the region-program spine.
 
-Serving is where the unified-memory policy earns its keep (paper C1/C4):
-KV pages come from the ``DeviceBufferPool`` (no alloc churn between
-requests), and with ``--offload-kv`` the cache is placed in ``pinned_host``
-memory — the single-address-space model lets one config flag move hundreds
-of GB of cache off HBM with zero changes to the decode math.
+Serving is where the unified-memory policy earns its keep (paper C1/C4).
+The request path is three directive-sized regions — ``PREFILL``,
+``DECODE_STEP``, ``KV_APPEND`` — captured as two RegionPrograms (one
+prefill call; one greedy decode loop, one ``DECODE_STEP`` + ``KV_APPEND``
+pair per generated token) and replayed through an ``Executor`` under any
+``--policy``; ``--replay-batch N`` pushes N independent request groups
+through the decode program as ONE vmapped composite
+(``RegionProgram.replay_batch``, the heavy-traffic path).
+
+``--offload-kv`` is *just a policy choice*: :func:`offload_kv_cache`
+builds a role-keyed :class:`KVCachePlacer` — only the actual ``k``/``v``
+cache pages (megabytes at serving scale) above ``min_bytes`` move to host
+DRAM; slot/position bookkeeping is decode-hot and stays deviceside no
+matter how large.  The decode math never changes, only the placement axis.
+
+The pre-capture jit path (:func:`build_server` + :func:`decode_stream`)
+remains as the streaming reference: the decode loop syncs once per
+``--sync-every`` tokens (0 = end of stream) instead of per token — a
+per-token ``block_until_ready`` serializes the stream, and ``fig_serve``
+(benchmarks/run.py) records the reclaimed latency.  Under
+``UnifiedPolicy`` the captured-program tokens are asserted bit-identical
+to this jit path on every run.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
-      --batch 4 --prompt-len 32 --gen 32
+      --batch 4 --prompt-len 32 --gen 32 --policy unified --report
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import time
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,11 +41,12 @@ import numpy as np
 from repro.configs.reduced import reduced as make_reduced
 from repro.configs.registry import get_config
 from repro.core.ledger import Ledger
-from repro.core.pool import DeviceBufferPool
-from repro.core.regions import Executor, UnifiedPolicy, region
-from repro.core.umem import preferred_host_space, tree_place
+from repro.core.program import capture
+from repro.core.regions import Executor, Placer, UnifiedPolicy, region
+from repro.core.umem import MemSpace, preferred_host_space, tree_place
 from repro.launch import sharding as SH
 from repro.launch.mesh import make_smoke_mesh
+from repro.launch.policy import PLACER_MIN_BYTES, POLICY_CHOICES, lm_policy
 from repro.models import transformer as T
 from repro.train import step as S
 
@@ -39,14 +60,149 @@ KV_PLACE_KEYS = ("k", "v")
 KV_PLACE_MIN_BYTES = 32768
 
 
-def offload_kv_cache(cache, space, min_bytes=KV_PLACE_MIN_BYTES):
+def place_kv_leaves(tree, space: MemSpace, min_bytes=KV_PLACE_MIN_BYTES):
+    """Role-keyed placement: move only ``k``/``v``-named leaves above
+    ``min_bytes`` to ``space``; every other leaf stays put."""
     def per_leaf(path, x):
         keys = {getattr(p, "key", None) for p in path}
         if keys & set(KV_PLACE_KEYS):
             return tree_place(x, space, min_bytes=min_bytes)
         return x
-    return jax.tree_util.tree_map_with_path(per_leaf, cache)
+    return jax.tree_util.tree_map_with_path(per_leaf, tree)
 
+
+@dataclasses.dataclass
+class KVCachePlacer(Placer):
+    """KV-cache offload as a *placement axis* (:class:`Placer` subclass).
+
+    On top of the base hint behavior, every region's arguments and results
+    get the role-keyed treatment of :func:`place_kv_leaves`: ``k``/``v``
+    cache pages above ``kv_min_bytes`` are re-homed to ``kv_space`` each
+    time they cross a region boundary — the ``KV_APPEND`` commit point in
+    the decode program re-places the token's freshly appended pages.  With
+    ``kv_space=None`` this is exactly the base :class:`Placer`.
+    """
+    kv_space: Optional[MemSpace] = None
+    kv_min_bytes: int = KV_PLACE_MIN_BYTES
+
+    def place_args(self, target_region, args, kwargs):
+        args, kwargs = super().place_args(target_region, args, kwargs)
+        if self.kv_space is None:
+            return args, kwargs
+        return place_kv_leaves((args, kwargs), self.kv_space,
+                               self.kv_min_bytes)
+
+    def place_result(self, target_region, out):
+        out = super().place_result(target_region, out)
+        if self.kv_space is None:
+            return out
+        return place_kv_leaves(out, self.kv_space, self.kv_min_bytes)
+
+
+def offload_kv_cache(space: Optional[MemSpace] = None,
+                     min_bytes: int = KV_PLACE_MIN_BYTES) -> KVCachePlacer:
+    """The ``--offload-kv`` Placer: role-keyed KV offload to host DRAM
+    (``preferred_host_space()`` unless ``space`` names one explicitly)."""
+    return KVCachePlacer(min_bytes=PLACER_MIN_BYTES,
+                         kv_space=space or preferred_host_space(),
+                         kv_min_bytes=min_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Serving regions + captured programs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeRegions:
+    """The request path as directive-sized regions (params closed over)."""
+    prefill: Any        # (batch, cache)    -> (tok, cache)
+    decode_step: Any    # (tok, cache, pos) -> (tok, cache)
+    kv_append: Any      # (cache,)          -> cache
+
+
+def make_serve_regions(cfg, mesh, params, *, ledger: Optional[Ledger] = None,
+                       q_chunk: int = 256) -> ServeRegions:
+    """``PREFILL`` / ``DECODE_STEP`` / ``KV_APPEND`` on one ledger.
+
+    ``params`` are closed over (constants), which is exactly what
+    ``replay_batch`` wants: under ``vmap`` they broadcast across the N
+    stacked requests while tokens and caches batch.  ``KV_APPEND`` is the
+    cache *commit* directive: the model's fused insert runs inside
+    ``DECODE_STEP`` (attention appends as it attends), and this
+    math-identity region is where the policy's placement axis re-homes the
+    appended pages (role-keyed ``--offload-kv``) and the ledger accounts
+    the per-token cache commit.  ``offloaded=False``: commitment is
+    bookkeeping, not a staged offload — no policy stages the whole cache
+    twice per token.
+    """
+    rules = SH.ShardingRules("serve")
+    shd = SH.make_sharder(mesh, rules)
+    raw_prefill = S.make_prefill_step(
+        cfg, lambda: T.Ctx(mode="prefill", shd=shd, q_chunk=q_chunk,
+                           remat=False))
+    raw_decode = S.make_decode_step(
+        cfg, lambda: T.Ctx(mode="decode", shd=shd, remat=False))
+
+    @region("PREFILL", ledger=ledger)
+    def prefill_region(batch, cache):
+        logits, cache = raw_prefill(params, batch, cache)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    @region("DECODE_STEP", ledger=ledger)
+    def decode_region(tok, cache, pos):
+        logits, cache = raw_decode(params, tok, cache, pos)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    # donate_args: the cache fed to KV_APPEND is always the PREVIOUS
+    # region's output (never a program input), and this commit is its last
+    # consumer — XLA aliases the buffers through, so the pass-through costs
+    # O(1), not an O(cache-bytes) copy per token
+    @region("KV_APPEND", ledger=ledger, offloaded=False, donate_args=(0,))
+    def kv_append(cache):
+        return cache
+
+    return ServeRegions(prefill=prefill_region, decode_step=decode_region,
+                        kv_append=kv_append)
+
+
+def capture_prefill_program(regions: ServeRegions, example_batch,
+                            example_cache, name: str = "prefill_program"):
+    """Prefill as a RegionProgram: one ``PREFILL`` call, then the
+    ``KV_APPEND`` commit of the prompt's cache pages."""
+    def prefill_fn(run, batch, cache):
+        tok, cache = run(regions.prefill, batch, cache)
+        cache = run(regions.kv_append, cache)
+        return tok, cache
+
+    return capture(prefill_fn, example_batch, example_cache, name=name)
+
+
+def capture_decode_program(regions: ServeRegions, prompt_len: int, gen: int,
+                           example_tok, example_cache,
+                           name: str = "decode_program"):
+    """The greedy decode loop as one RegionProgram.
+
+    Each generated token is one ``DECODE_STEP`` (decode + argmax) whose KV
+    cache flows into a ``KV_APPEND`` commit and on to the next token, so
+    the captured trace carries the full request dataflow; positions are
+    frozen constants (CUDA-graph style).
+    """
+    def gen_loop(run, tok, cache):
+        toks = [tok]
+        for i in range(gen - 1):
+            tok, cache = run(regions.decode_step, tok, cache,
+                             jnp.int32(prompt_len + i))
+            cache = run(regions.kv_append, cache)
+            toks.append(tok)
+        return tuple(toks)      # tuple of refs (stacking outside a region
+        #                         would freeze the result as a constant)
+
+    return capture(gen_loop, example_tok, example_cache, name=name)
+
+
+# ---------------------------------------------------------------------------
+# Pre-capture jit path (streaming reference)
+# ---------------------------------------------------------------------------
 
 def build_server(cfg, mesh, batch: int, max_len: int, q_chunk=256,
                  offload_kv=False):
@@ -66,52 +222,39 @@ def build_server(cfg, mesh, batch: int, max_len: int, q_chunk=256,
     def make_cache():
         cache = T.init_cache(cfg, batch, max_len)
         if kv_space is not None:
-            cache = offload_kv_cache(cache, kv_space)
+            cache = place_kv_leaves(cache, kv_space)
         return cache
 
     return prefill, decode, make_cache
 
 
-def capture_decode_program(cfg, mesh, params, prompt_len: int, gen: int,
-                           example_tok, example_cache, ledger=None):
-    """The greedy decode loop as one :class:`RegionProgram`.
-
-    Each generated token is one ``decode+argmax`` region call whose KV cache
-    flows region-to-region, so the captured trace carries the full request
-    dataflow.  ``params`` are closed over (constants), which is exactly what
-    ``replay_batch`` wants: under ``vmap`` they broadcast across the N
-    stacked requests while tokens and caches batch.
-    """
-    from repro.core.program import capture
-
-    rules = SH.ShardingRules("serve")
-    shd = SH.make_sharder(mesh, rules)
-    raw_decode = S.make_decode_step(
-        cfg, lambda: T.Ctx(mode="decode", shd=shd, remat=False))
-
-    @region("decode+argmax", ledger=ledger or Ledger("decode_program"))
-    def decode_region(tok, cache, pos):
-        logits, cache = raw_decode(params, tok, cache, pos)
-        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
-
-    def gen_loop(run, tok, cache):
-        toks = [tok]
-        for i in range(gen - 1):
-            tok, cache = run(decode_region, tok, cache,
-                             jnp.int32(prompt_len + i))
-            toks.append(tok)
-        return tuple(toks)      # tuple of refs (stacking outside a region
-        #                         would freeze the result as a constant)
-
-    return capture(gen_loop, example_tok, example_cache,
-                   name="decode_program")
+def decode_stream(decode, params, tok, cache, prompt_len: int, gen: int,
+                  sync_every: int = 0):
+    """Greedy decode on the raw jit path, syncing once per ``sync_every``
+    tokens (0 = once at end of stream).  A per-token
+    ``jax.block_until_ready`` serializes the stream — dispatch of token
+    *i+1* cannot start until *i* has fully materialized; syncing per
+    report interval reclaims that latency (measured by ``fig_serve``)."""
+    toks = [tok]
+    for i in range(gen - 1):
+        logits, cache = decode(params, tok, cache, jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        toks.append(tok)
+        if sync_every and (i + 1) % sync_every == 0:
+            jax.block_until_ready(tok)
+    jax.block_until_ready(toks[-1])
+    return toks, cache
 
 
-def replay_batch_demo(cfg, mesh, prefill, make_cache, params, args,
-                      n_requests: int, apu_mesh_size: int = 0):
-    """The "heavy traffic" path: capture one request group's decode loop,
-    then push N independent request groups through it as ONE vmapped
-    program (``RegionProgram.replay_batch``).
+# ---------------------------------------------------------------------------
+# Heavy traffic: replay_batch over N request groups
+# ---------------------------------------------------------------------------
+
+def replay_batch_demo(cfg, ex, decode_prog, prefill, make_cache,
+                      params, args, n_requests: int, apu_mesh_size: int = 0):
+    """The "heavy traffic" path: push N independent request groups through
+    the captured decode program as ONE vmapped composite
+    (``RegionProgram.replay_batch``).
 
     ``apu_mesh_size`` > 0 additionally scatters the stacked request groups
     across a 1-D mesh of simulated APUs (``repro.core.shard_program``):
@@ -130,10 +273,6 @@ def replay_batch_demo(cfg, mesh, prefill, make_cache, params, args,
         toks.append(jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32))
         caches.append(cache)
 
-    ex = Executor(UnifiedPolicy(), Ledger("serve_batch"))
-    prog = capture_decode_program(cfg, mesh, params, args.prompt_len,
-                                  args.gen, toks[0], caches[0],
-                                  ledger=ex.ledger)
     stacked_tok = jnp.stack(toks)
     stacked_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
     sharded = None
@@ -143,19 +282,20 @@ def replay_batch_demo(cfg, mesh, prefill, make_cache, params, args,
         if n_requests % apu_mesh_size:
             raise SystemExit(f"--replay-batch {n_requests} does not divide "
                              f"over --mesh {apu_mesh_size} APUs")
-        sharded = shard_program(prog, make_apu_mesh(apu_mesh_size),
+        sharded = shard_program(decode_prog, make_apu_mesh(apu_mesh_size),
                                 UnifiedPolicy(), shard_dim=0)
     t0 = time.time()
     if sharded is not None:
         out = sharded.replay_batch(stacked_tok, stacked_cache)
     else:
-        out = prog.replay_batch(stacked_tok, stacked_cache, executor=ex)
+        out = decode_prog.replay_batch(stacked_tok, stacked_cache,
+                                       executor=ex)
     dt = time.time() - t0
     seqs = np.asarray(jnp.stack(out, axis=-1))        # (N, B, gen)
     assert np.isfinite(seqs).all()
     # request 0 replayed alone through the same program (vmap-free):
     # agreement can drop below 1.0 only via argmax ties under batched matmul
-    solo = np.asarray(jnp.stack(prog.replay(ex, toks[0], caches[0]),
+    solo = np.asarray(jnp.stack(decode_prog.replay(ex, toks[0], caches[0]),
                                 axis=-1))
     agree = float((seqs[0] == solo).mean())
     total = n_requests * args.batch * args.gen
@@ -193,12 +333,23 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--offload-kv", action="store_true")
+    ap.add_argument("--offload-kv", action="store_true",
+                    help="role-keyed KV offload to host DRAM — a Placer "
+                         "swapped into the policy, nothing else changes")
+    ap.add_argument("--policy", default="unified", choices=POLICY_CHOICES,
+                    help="ExecutionPolicy the serving regions run under "
+                         "(adaptive threads cfg.memory.target_cutoff)")
+    ap.add_argument("--report", action="store_true",
+                    help="print the run's coverage_report() as JSON")
+    ap.add_argument("--sync-every", type=int, default=0, metavar="K",
+                    help="jit streaming path: block_until_ready once per K "
+                         "tokens (0 = end of stream; 1 = the retired "
+                         "per-token sync)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replay-batch", type=int, default=0, metavar="N",
-                    help="also capture the decode loop as a RegionProgram "
-                         "and replay it over N stacked request groups "
-                         "(repro.core.program heavy-traffic path)")
+                    help="also push N stacked request groups through the "
+                         "captured decode program "
+                         "(RegionProgram.replay_batch heavy-traffic path)")
     ap.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="scatter the --replay-batch request groups over a "
                          "mesh of N simulated APUs (shard_program); export "
@@ -216,42 +367,78 @@ def main(argv=None):
     # shard_program mesh — one jit cannot mix two device assignments
     mesh = make_smoke_mesh((args.mesh, 1)) if args.mesh else make_smoke_mesh()
     max_len = args.prompt_len + args.gen
-    prefill, decode, make_cache = build_server(
-        cfg, mesh, args.batch, max_len, offload_kv=args.offload_kv)
+    placer = offload_kv_cache() if args.offload_kv else None
+    ex = Executor(lm_policy(args.policy, cfg.memory, placer=placer),
+                  Ledger("serve"))
     key = jax.random.PRNGKey(args.seed)
     params = T.init(key, cfg)
+    regions = make_serve_regions(cfg, mesh, params, ledger=ex.ledger)
 
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab, jnp.int32)
-    cache = make_cache()
-
-    t0 = time.time()
     batch = _prefill_inputs(cfg, args, prompts)
-    logits, cache = prefill(params, batch, cache)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
 
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-    toks = [tok]
+    # -- captured-program path (the accounted serving spine) -------------
+    prefill_prog = capture_prefill_program(regions, batch,
+                                           T.init_cache(cfg, args.batch,
+                                                        max_len))
+    t0 = time.time()
+    tok, cache = prefill_prog.replay(ex, batch,
+                                     T.init_cache(cfg, args.batch, max_len))
+    t_prefill = time.time() - t0
+    decode_prog = capture_decode_program(regions, args.prompt_len, args.gen,
+                                         tok, cache)
     t1 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache, jnp.int32(args.prompt_len + i))
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        toks.append(tok)
-    jax.block_until_ready(tok)
+    toks = decode_prog.replay(ex, tok, cache)
     t_decode = time.time() - t1
-    total_new = args.batch * args.gen
-    print(f"[serve] {args.arch}{' (reduced)' if args.reduced else ''}: "
-          f"prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f} ms; "
-          f"decode {total_new} tokens in {t_decode*1e3:.1f} ms "
-          f"({total_new/max(t_decode,1e-9):.0f} tok/s)"
-          + (f" [KV in {preferred_host_space().kind}]"
-             if args.offload_kv and preferred_host_space() else ""))
     seq = np.asarray(jnp.stack(toks, axis=1))
     assert np.isfinite(seq).all()
+
+    # -- pre-capture jit streaming path (interval sync) -------------------
+    # built only when needed: under UnifiedPolicy it doubles as the parity
+    # oracle (capture changes the schedule, never the tokens); other
+    # policies change placement/staging, not math — re-running the jit
+    # stream there would double the run for numbers the report carries
+    stream_note = ""
+    prefill = make_cache = None
+    if args.policy == "unified" or args.replay_batch:
+        prefill, decode, make_cache = build_server(
+            cfg, mesh, args.batch, max_len, offload_kv=args.offload_kv)
+    if args.policy == "unified":
+        logits, cache_j = prefill(params, batch, make_cache())
+        tok_j = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        # warm the decode executable on a throwaway prefill output (a
+        # fresh make_cache() has different sharding than the prefill
+        # result and would compile a second executable) so the stream
+        # timing measures the stream, not the compile
+        _, cache_w = prefill(params, batch, make_cache())
+        jax.block_until_ready(decode(params, tok_j, cache_w,
+                                     jnp.int32(args.prompt_len)))
+        t2 = time.time()
+        toks_j, _ = decode_stream(decode, params, tok_j, cache_j,
+                                  args.prompt_len, args.gen,
+                                  sync_every=args.sync_every)
+        t_stream = time.time() - t2
+        seq_j = np.asarray(jnp.stack(toks_j, axis=1))
+        # the acceptance invariant: program tokens == jit-path tokens
+        np.testing.assert_array_equal(seq, seq_j)
+        total_new = args.batch * args.gen
+        stream_note = f", {total_new/max(t_stream,1e-9):.0f} tok/s stream"
+
+    total_new = args.batch * args.gen
+    print(f"[serve] {args.arch}{' (reduced)' if args.reduced else ''} "
+          f"[{ex.mode}]: prefill {args.batch}x{args.prompt_len} in "
+          f"{t_prefill*1e3:.1f} ms; decode {total_new} tokens in "
+          f"{t_decode*1e3:.1f} ms ({total_new/max(t_decode,1e-9):.0f} tok/s "
+          f"program{stream_note})"
+          + (f" [KV in {preferred_host_space().kind}]"
+             if args.offload_kv and preferred_host_space() else ""))
     if args.replay_batch:
-        replay_batch_demo(cfg, mesh, prefill, make_cache, params, args,
-                          args.replay_batch, apu_mesh_size=args.mesh)
+        replay_batch_demo(cfg, ex, decode_prog, prefill, make_cache,
+                          params, args, args.replay_batch,
+                          apu_mesh_size=args.mesh)
+    if args.report:
+        print(json.dumps(ex.report(), indent=1, default=str))
     return seq
 
 

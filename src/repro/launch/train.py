@@ -1,20 +1,27 @@
-"""End-to-end training driver.
+"""End-to-end training driver — on the region-program spine.
 
 Integrates the full stack: config registry (--arch, full or --reduced),
-mesh + logical-axis sharding (FSDP/TP), the unified-memory policy
-(--offload-optimizer puts AdamW moments in pinned_host — paper C1), pooled
-host staging, async atomic checkpointing, the fault-tolerant supervisor,
-and the deterministic data pipeline.
+mesh + logical-axis sharding (FSDP/TP), the region-decomposed train step
+(``FWD_BWD`` + ``ADAMW_UPDATE`` Regions captured as one RegionProgram and
+replayed through an Executor under ``--policy``), the unified-memory
+placement axis (--offload-optimizer attaches a host-space hint to the
+AdamW moments — paper C1, no hand-rolled placement calls), pooled host
+staging, async atomic checkpointing (each checkpoint carries a
+``coverage_report()`` snapshot beside the weights), the fault-tolerant
+supervisor (restarts re-capture the program against restored state while
+keeping the same Ledger), and the deterministic data pipeline.
+``--report`` prints the canonical ``coverage_report()`` as JSON.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --reduced --steps 50 --batch 8 --seq 64
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-30b-a3b \
-      --reduced --steps 20 --batch 4 --seq 32 --offload-optimizer
+      --reduced --steps 20 --batch 4 --seq 32 --offload-optimizer --report
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Optional
 
@@ -26,10 +33,13 @@ from repro.checkpoint.ckpt import Checkpointer
 from repro.configs.base import ModelConfig
 from repro.configs.reduced import reduced as make_reduced
 from repro.configs.registry import get_config
-from repro.core.umem import place_like, preferred_host_space
+from repro.core.ledger import Ledger
+from repro.core.regions import Executor
+from repro.core.umem import place_like
 from repro.data.pipeline import ShardInfo, make_source
 from repro.launch import sharding as SH
 from repro.launch.mesh import make_smoke_mesh
+from repro.launch.policy import POLICY_CHOICES, lm_policy
 from repro.models import transformer as T
 from repro.models.params import abstract_params
 from repro.optim import adamw
@@ -38,46 +48,62 @@ from repro.train import step as S
 
 
 def build_trainer(cfg: ModelConfig, mesh, *, lr=3e-4, offload_optimizer=False,
-                  q_chunk=512, seed=0):
-    """Returns (init_fn() -> state, step_fn(state, tokens) -> (state, metrics))."""
+                  q_chunk=512, seed=0, policy: str = "unified",
+                  executor: Optional[Executor] = None):
+    """Returns ``(init_fn, capture_fn, ex)``.
+
+    ``init_fn() -> state`` builds sharded params + optimizer state.
+    ``capture_fn(state, batch) -> step_fn`` captures one train step as a
+    RegionProgram over the trainer's ``FWD_BWD``/``ADAMW_UPDATE`` regions
+    and returns ``step_fn(state, batch) -> (state, metrics)`` replaying it
+    through ``ex`` — call it again after a restore to re-capture (the
+    regions, and therefore the Ledger rows, are reused).
+    ``ex`` is the Executor every step runs under; ``ex.report()`` is the
+    canonical coverage report for the run.
+
+    Memory note: the pre-regions trainer jitted the whole step with
+    ``donate_argnums=(0,)``, updating params/moments in place.  Region
+    executables do not donate (a replayed region may be staged, and the
+    discrete stager recycles staged-in buffers after the call — donation
+    would hand consumed storage back to the pool), so peak state memory
+    is roughly 2x the old path at the ADAMW_UPDATE boundary.  A
+    stage-aware donation axis is the natural follow-up; at the smoke
+    scales this container runs, the 2x is noise.
+    """
     rules = SH.ShardingRules("train")
     shd = SH.make_sharder(mesh, rules)
     opt_cfg = adamw.AdamWConfig(lr=lr)
     specs = T.param_specs(cfg)
     psh = SH.tree_param_shardings(specs, mesh, rules)
-    mom_kind = None
-    if offload_optimizer:
-        host_space = preferred_host_space()
-        mom_kind = host_space.kind if host_space is not None else None
-    msh_m = SH.tree_param_shardings(specs, mesh, rules, memory_kind=mom_kind)
-    repl = SH.replicated(mesh)
-    osh = {"m": msh_m, "v": msh_m, "step": repl}
 
+    ex = executor or Executor(lm_policy(policy, cfg.memory), Ledger("train"))
     make_ctx = lambda: T.Ctx(mode="train", shd=shd, q_chunk=q_chunk)
-    raw_step = S.make_train_step(cfg, opt_cfg, make_ctx)
-
-    def step2(state, batch):
-        params, opt = state
-        params, opt, metrics = raw_step(params, opt, batch)
-        return (params, opt), metrics
-
-    metr = {k: repl for k in ("loss", "ce", "moe_aux", "grad_norm")}
-    jstep = jax.jit(step2,
-                    in_shardings=((psh, osh), None),
-                    out_shardings=((psh, osh), metr),
-                    donate_argnums=(0,))
+    regions = S.make_train_regions(cfg, opt_cfg, make_ctx, ledger=ex.ledger,
+                                   offload_optimizer=offload_optimizer)
 
     def init_fn():
         key = jax.random.PRNGKey(seed)
         params = jax.jit(lambda k: T.init(k, cfg), out_shardings=psh)(key)
+        # moments mirror their params' FSDP/TP partitioning (a moment tree
+        # left unsharded would clash with mesh-committed params inside the
+        # ADAMW_UPDATE jit on any real mesh); which memory SPACE they live
+        # in stays a policy-axis decision — the ADAMW_UPDATE placement
+        # hints move them to host space when --offload-optimizer is set
         opt = adamw.init_state(params, opt_cfg)
-        if mom_kind:
-            opt = {"m": place_like(opt["m"], osh["m"]),
-                   "v": place_like(opt["v"], osh["v"]),
-                   "step": opt["step"]}
+        opt = {"m": place_like(opt["m"], psh),
+               "v": place_like(opt["v"], psh),
+               "step": opt["step"]}
         return (params, opt)
 
-    return init_fn, jstep
+    def capture_fn(state, batch):
+        prog = S.capture_train_program(regions, state, batch)
+
+        def step_fn(state, batch):
+            return prog.replay(ex, state, batch)
+
+        return step_fn
+
+    return init_fn, capture_fn, ex
 
 
 def main(argv=None):
@@ -89,6 +115,11 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--offload-optimizer", action="store_true")
+    ap.add_argument("--policy", default="unified", choices=POLICY_CHOICES,
+                    help="ExecutionPolicy the train-step regions run under "
+                         "(adaptive threads cfg.memory.target_cutoff)")
+    ap.add_argument("--report", action="store_true",
+                    help="print the run's coverage_report() as JSON")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
@@ -102,9 +133,9 @@ def main(argv=None):
     if args.reduced:
         cfg = make_reduced(cfg)
     mesh = make_smoke_mesh()
-    init_fn, jstep = build_trainer(cfg, mesh, lr=args.lr,
-                                   offload_optimizer=args.offload_optimizer,
-                                   q_chunk=min(512, args.seq), seed=args.seed)
+    init_fn, capture_fn, ex = build_trainer(
+        cfg, mesh, lr=args.lr, offload_optimizer=args.offload_optimizer,
+        q_chunk=min(512, args.seq), seed=args.seed, policy=args.policy)
     src = make_source(args.data, cfg.vocab, path=args.data_path,
                       seed=args.seed)
 
@@ -131,18 +162,21 @@ def main(argv=None):
             start = man["extra"]["step"]
             print(f"[train] resumed at step {start}")
 
+    step_fn = capture_fn(state, batch_fn(start))
     t0 = time.time()
     if ckpt is not None:
         fault = FaultInjector({int(s) for s in args.fail_at.split(",") if s})
-        sup = TrainSupervisor(jstep, batch_fn, ckpt,
-                              ckpt_every=args.ckpt_every, fault=fault)
+        sup = TrainSupervisor(
+            step_fn, batch_fn, ckpt, ckpt_every=args.ckpt_every, fault=fault,
+            rebuild_step=lambda st, step: capture_fn(st, batch_fn(step)),
+            report_fn=ex.report)
         state, rep = sup.run(state, start, args.steps)
         print(f"[train] done: {rep}")
         losses = [rep.metrics_last.get("loss", float("nan"))]
     else:
         losses = []
         for step in range(start, start + args.steps):
-            state, metrics = jstep(state, batch_fn(step))
+            state, metrics = step_fn(state, batch_fn(step))
             losses.append(float(metrics["loss"]))
             if step % 10 == 0 or step == start + args.steps - 1:
                 print(f"[train] step {step} loss {losses[-1]:.4f} "
@@ -152,6 +186,8 @@ def main(argv=None):
     print(f"[train] {args.arch}{' (reduced)' if args.reduced else ''}: "
           f"{toks/dt:.0f} tok/s, first loss {losses[0]:.4f}, "
           f"last loss {losses[-1]:.4f}")
+    if args.report:
+        print(json.dumps(ex.report(), indent=1, default=str))
     return losses
 
 

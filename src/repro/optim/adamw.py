@@ -1,10 +1,19 @@
 """AdamW with unified-memory-policy-aware state placement.
 
 The optimizer state is a plain pytree mirroring params (moments in fp32).
-Under ``MemoryPolicy.offload_optimizer`` the launcher places the moments in
-``pinned_host`` memory (the paper's C1: one logical space, placement by
+Under ``MemoryPolicy.offload_optimizer`` the ``ADAMW_UPDATE`` region
+(``repro.train.step.make_train_regions``) carries a host-space placement
+hint on ``opt_state`` (the paper's C1: one logical space, placement by
 policy) — the update math here is identical either way; XLA streams the
 moments through HBM for the fused update.
+
+Two implementations of the same update ship as region variants:
+:func:`apply_updates` (the fused flatten — ``ref``) and
+:func:`apply_updates_leafwise` (per-leaf ``jax.tree.map`` form — the
+``host`` variant: smaller per-leaf programs that a host backend schedules
+leaf-at-a-time instead of one monolithic fusion).  Both walk leaves in
+treedef order with identical per-leaf math, so results are bit-identical
+and any Selector may swap them per call.
 """
 from __future__ import annotations
 
@@ -78,3 +87,39 @@ def apply_updates(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
     new_m = tdef.unflatten([o[1] for o in out])
     new_v = tdef.unflatten([o[2] for o in out])
     return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+def apply_updates_leafwise(params, grads, state, cfg: AdamWConfig,
+                           lr_scale=1.0):
+    """The ``host`` implementation variant of :func:`apply_updates`.
+
+    Same per-leaf math and leaf order (bit-identical results); expressed as
+    three ``jax.tree.map`` passes so the lowered program stays one small
+    kernel per leaf — the shape host backends schedule well — instead of
+    the fused flatten the device path prefers.
+    """
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+    state_dt = jnp.dtype(cfg.moment_dtype)
+
+    gclip = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+    new_m = jax.tree.map(
+        lambda g, m: cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g,
+        gclip, state["m"])
+    new_v = jax.tree.map(
+        lambda g, v: cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g,
+        gclip, state["v"])
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        return (pf - lr * (u + cfg.weight_decay * pf)).astype(p.dtype)
+
+    new_p = jax.tree.map(upd, params, new_m, new_v)
+    cast = lambda t: jax.tree.map(lambda x: x.astype(state_dt), t)
+    return new_p, {"m": cast(new_m), "v": cast(new_v), "step": step}, gnorm

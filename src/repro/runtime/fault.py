@@ -4,10 +4,17 @@ straggler detection.
 At 1000+ nodes the MTBF of the job is minutes-to-hours; the supervisor
 treats the train step as an unreliable operation:
 
-* periodic checkpoints (async, atomic — see checkpoint/ckpt.py),
+* periodic checkpoints (async, atomic — see checkpoint/ckpt.py), each one
+  carrying a ``coverage_report()`` snapshot beside the weights when a
+  ``report_fn`` is given (the ledger state that produced this checkpoint),
 * on failure: restore latest checkpoint, rebuild the data stream at the
   restored step (the pipeline is step-deterministic), continue — restart
-  equivalence is a tested invariant, not a hope,
+  equivalence is a tested invariant, not a hope.  When the step function
+  is a captured :class:`~repro.core.program.RegionProgram` replay, pass
+  ``rebuild_step`` so the restart RE-CAPTURES the program against the
+  restored state — the regions (and therefore their Ledger rows) are
+  reused, so accounting accumulates across restarts instead of forking
+  ``FWD_BWD#2``-style duplicate rows,
 * straggler detection: per-step wall-time EWMA + threshold; flagged steps
   are reported through the ledger (on a real fleet this feeds the
   reschedule/backup-worker policy; the policy hook is injectable).
@@ -73,13 +80,22 @@ class TrainSupervisor:
 
     ``state`` is any pytree (params/opt/...); ``batch_fn(step)`` must be
     deterministic; ``fault`` is an optional injector (tests).
+
+    ``rebuild_step(state, step) -> step_fn`` (optional) is invoked after
+    every restore: a region-program trainer re-captures its step program
+    against the restored state, keeping the same Regions/Ledger (see
+    ``repro.train.step.capture_train_program``).  ``report_fn() -> dict``
+    (optional) is snapshotted into every checkpoint beside the weights
+    (``coverage.json``).
     """
 
     def __init__(self, step_fn: Callable, batch_fn: Callable,
                  ckpt: Checkpointer, ckpt_every: int = 50,
                  fault: Optional[FaultInjector] = None,
                  straggler: Optional[StragglerMonitor] = None,
-                 max_restarts: int = 10):
+                 max_restarts: int = 10,
+                 rebuild_step: Optional[Callable] = None,
+                 report_fn: Optional[Callable] = None):
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.ckpt = ckpt
@@ -87,6 +103,12 @@ class TrainSupervisor:
         self.fault = fault or FaultInjector()
         self.straggler = straggler or StragglerMonitor()
         self.max_restarts = max_restarts
+        self.rebuild_step = rebuild_step
+        self.report_fn = report_fn
+
+    def _save(self, step: int, state: Any) -> None:
+        report = self.report_fn() if self.report_fn is not None else None
+        self.ckpt.save(step, state, extra={"step": step}, report=report)
 
     def run(self, state: Any, start_step: int, n_steps: int,
             shardings: Any = None) -> tuple:
@@ -97,7 +119,7 @@ class TrainSupervisor:
         if self.ckpt.latest_step() is None:
             # anchor: a fault before the first periodic save must restart
             # from the true initial state, not a partially-advanced one
-            self.ckpt.save(start_step, state, extra={"step": start_step})
+            self._save(start_step, state)
             rep.checkpoints += 1
         while step < end:
             try:
@@ -114,7 +136,7 @@ class TrainSupervisor:
                 rep.metrics_last = {
                     k: float(v) for k, v in metrics.items()} if metrics else {}
                 if step % self.ckpt_every == 0 or step == end:
-                    self.ckpt.save(step, state, extra={"step": step})
+                    self._save(step, state)
                     rep.checkpoints += 1
             except Exception:
                 restarts += 1
@@ -129,6 +151,10 @@ class TrainSupervisor:
                 state, manifest = self.ckpt.restore(state, step=latest,
                                                     shardings=shardings)
                 step = manifest["extra"]["step"]
+                if self.rebuild_step is not None:
+                    # re-capture against the restored state; same regions,
+                    # same Ledger — accounting survives the restart
+                    self.step_fn = self.rebuild_step(state, step)
         rep.final_step = step
         self.ckpt.wait()
         return state, rep

@@ -1,4 +1,14 @@
-"""Train / serve step functions — the units the launcher jits and lowers."""
+"""Train / serve step functions — the units the launcher jits and lowers.
+
+The train step also ships region-decomposed (``make_train_regions``): two
+directive-sized :class:`~repro.core.regions.Region`\\ s — ``FWD_BWD`` and
+``ADAMW_UPDATE`` — so the LM stack rides the same Region x ExecutionPolicy
+spine as the CFD case study.  Optimizer offload is a *placement-axis* hint
+on ``ADAMW_UPDATE``'s ``opt_state`` argument (paper C1: the policy's
+Placer decides, not hand-rolled ``place_like`` calls), and the update
+registers a ``host`` implementation variant so ``TargetSelector`` /
+``AutotuneSelector`` can pick the host-tuned path per call.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -8,6 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.ledger import Ledger
+from repro.core.regions import region
+from repro.core.umem import preferred_host_space
 from repro.models import transformer as T
 from repro.models.layers import noshard
 from repro.optim import adamw
@@ -44,6 +57,82 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
         return params, opt_state, metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# The train step on the region spine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainRegions:
+    """The train step decomposed into directive-sized regions."""
+    fwd_bwd: Any            # (params, batch)             -> (grads, metrics)
+    adamw_update: Any       # (params, grads, opt_state)  -> (params, opt, gnorm)
+
+
+def make_train_regions(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                       make_ctx=None, *, ledger: Optional[Ledger] = None,
+                       offload_optimizer: bool = False) -> TrainRegions:
+    """``FWD_BWD`` + ``ADAMW_UPDATE`` as Regions on one ledger.
+
+    ``offload_optimizer`` attaches host-space :class:`MemSpace` hints to
+    ``ADAMW_UPDATE``: on the ``opt_state`` argument AND on the
+    ``opt_state`` element of the result (keyed ``result_space``), so the
+    policy's Placer keeps the AdamW moments host-resident *between* steps
+    — the freshly computed moments are re-homed each update instead of
+    lingering in device memory until the next call (min_bytes-gated, so
+    the scalar step counter stays put).  The math never changes; only the
+    placement axis does.
+    """
+    make_ctx = make_ctx or (lambda: T.Ctx(mode="train"))
+
+    @region("FWD_BWD", ledger=ledger)
+    def fwd_bwd(params, batch):
+        ctx = make_ctx()
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, ctx)
+        return grads, {"loss": loss, "ce": ce, "moe_aux": aux}
+
+    placement = result_hint = None
+    if offload_optimizer:
+        host_space = preferred_host_space()
+        if host_space is not None:
+            placement = {"opt_state": host_space}
+            result_hint = {1: host_space}     # of (params, opt_state, gnorm)
+
+    @region("ADAMW_UPDATE", ledger=ledger, placement=placement,
+            result_space=result_hint)
+    def adamw_update(params, grads, opt_state):
+        return adamw.apply_updates(params, grads, opt_state, opt_cfg)
+
+    @adamw_update.variant("host")
+    def _adamw_update_host(params, grads, opt_state):
+        return adamw.apply_updates_leafwise(params, grads, opt_state,
+                                            opt_cfg)
+
+    return TrainRegions(fwd_bwd=fwd_bwd, adamw_update=adamw_update)
+
+
+def capture_train_program(regions: TrainRegions, example_state,
+                          example_batch, name: str = "train_step"):
+    """One train step captured as a :class:`RegionProgram`.
+
+    ``state = (params, opt_state)`` and ``batch`` are program inputs;
+    replaying under any executor re-issues ``FWD_BWD`` then
+    ``ADAMW_UPDATE`` with the recorded dataflow, so a supervisor restart
+    can re-capture against restored state while the regions — and their
+    ledger rows — stay the same objects (accounting accumulates across
+    restarts instead of forking new rows)."""
+    from repro.core.program import capture
+
+    def step(run, state, batch):
+        params, opt_state = state
+        grads, metrics = run(regions.fwd_bwd, params, batch)
+        params, opt_state, gnorm = run(regions.adamw_update, params, grads,
+                                       opt_state)
+        return (params, opt_state), {**metrics, "grad_norm": gnorm}
+
+    return capture(step, example_state, example_batch, name=name)
 
 
 def make_prefill_step(cfg: ModelConfig, make_ctx=None):

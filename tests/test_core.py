@@ -1,14 +1,14 @@
 """Paper-core unit + property tests: pool invariants (hypothesis), adaptive
-dispatch, ledger coverage, memory placement."""
+routing, ledger coverage, memory placement."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.dispatch import TargetDispatch, offload
 from repro.core.ledger import Ledger, offload_region
 from repro.core.pool import (HostStagingPool, POOL_MIN_ELEMS, _size_class)
+from repro.core.regions import AdaptivePolicy, Executor, Region, region
 from repro.core.umem import MemSpace, place, space_of, supported_spaces
 
 
@@ -49,29 +49,50 @@ class TestPoolProperties:
         assert pool.stats.hit_rate == 0.5
 
 
-class TestDispatch:
+class TestAdaptiveRouting:
+    """The ``if(target: n > TARGET_CUT_OFF)`` clause on the regions API —
+    the behaviors the retired TargetDispatch shim used to cover."""
+
     def test_cutoff_routes(self):
-        td = TargetDispatch(lambda x: x + 1, cutoff=100)
-        td(jnp.ones(10))
-        td(jnp.ones(1000))
-        assert td.stats.host_calls == 1 and td.stats.device_calls == 1
-        assert 0 < td.stats.offload_fraction < 1
+        ldg = Ledger("t")
+
+        @region("inc", ledger=ldg)
+        def inc(x):
+            return x + 1
+
+        ex = Executor(AdaptivePolicy(cutoff=100), ldg)
+        ex.run(inc, jnp.ones(10))
+        ex.run(inc, jnp.ones(1000))
+        r = ldg.regions["inc"]
+        assert r.host_calls == 1 and r.device_calls == 1
+        assert 0 < r.offload_fraction < 1
 
     def test_results_identical_both_paths(self):
-        td = TargetDispatch(lambda x: jnp.sin(x) * 2, cutoff=50)
-        x_small = jnp.linspace(0, 1, 10)
-        x_big = jnp.linspace(0, 1, 1000)
-        np.testing.assert_allclose(np.asarray(td(x_small)),
-                                   np.sin(np.linspace(0, 1, 10)) * 2, rtol=1e-6)
-        np.testing.assert_allclose(np.asarray(td(x_big)),
-                                   np.sin(np.linspace(0, 1, 1000)) * 2, rtol=1e-6)
+        ldg = Ledger("t")
+
+        @region("sin2", ledger=ldg)
+        def sin2(x):
+            return jnp.sin(x) * 2
+
+        ex = Executor(AdaptivePolicy(cutoff=50), ldg)
+        np.testing.assert_allclose(
+            np.asarray(ex.run(sin2, jnp.linspace(0, 1, 10))),
+            np.sin(np.linspace(0, 1, 10)) * 2, rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(ex.run(sin2, jnp.linspace(0, 1, 1000))),
+            np.sin(np.linspace(0, 1, 1000)) * 2, rtol=1e-6)
+        r = ldg.regions["sin2"]
+        assert r.host_calls == 1 and r.device_calls == 1
 
     def test_decorator(self):
-        @offload(cutoff=10)
+        @region("triple", ledger=Ledger("t"))
         def f(x):
             return x * 3
-        assert isinstance(f, TargetDispatch)
-        np.testing.assert_allclose(np.asarray(f(jnp.ones(5))), 3.0)
+
+        assert isinstance(f, Region)
+        out = Executor(AdaptivePolicy(cutoff=10), Ledger("t")).run(
+            f, jnp.ones(5))
+        np.testing.assert_allclose(np.asarray(out), 3.0)
 
 
 class TestLedger:

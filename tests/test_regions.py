@@ -3,7 +3,7 @@
 Covers the unified/discrete/host policy parity on a cavity time-step, the
 adaptive (TARGET_CUT_OFF-inside-an-executor) policy's ledger accounting,
 the uniform return contract, region-name uniquification, sizing, placement
-hints, calibration recording, and the deprecated shims."""
+hints, calibration recording, and the retired-shim import gate."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,9 +11,6 @@ import pytest
 
 from repro.cfd.grid import Grid
 from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
-from repro.core.dispatch import DispatchStats, TargetDispatch
-from repro.core.executors import (DiscreteExecutor, HostExecutor,
-                                  UnifiedExecutor, make_executor)
 from repro.core.ledger import Ledger
 from repro.core.regions import (AdaptivePolicy, DiscretePolicy, Executor,
                                 HostPolicy, MigrationStager, Region,
@@ -336,43 +333,59 @@ def test_legacy_closure_adapts_to_region():
 
 
 # ---------------------------------------------------------------------------
-# deprecated shims
+# retired shims: the regions API is the only offload path
 # ---------------------------------------------------------------------------
 
-def test_executor_shims_are_policy_instances():
-    assert isinstance(UnifiedExecutor(), Executor)
-    assert isinstance(HostExecutor(), Executor)
-    assert isinstance(HostExecutor().policy, HostPolicy)
-    assert isinstance(make_executor("discrete"), Executor)
-    assert make_executor("host").mode == "host"
-    ex = DiscreteExecutor()
-    assert ex.arena is ex.policy.arena
-    assert isinstance(ex.policy, DiscretePolicy)
+def test_no_internal_imports_of_retired_shims():
+    """core/dispatch and core/executors are deprecation-alias stubs for
+    external callers only; nothing in-repo may reference them (the same
+    gate CI runs)."""
+    import importlib.util
+    import pathlib
+    tool = pathlib.Path(__file__).resolve().parent.parent / "tools" / \
+        "check_retired_imports.py"
+    spec = importlib.util.spec_from_file_location("check_retired_imports",
+                                                  tool)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.check() == 0
 
 
-def test_target_dispatch_stats_reset_idiom():
-    td = TargetDispatch(lambda x: x + 1, cutoff=100, ledger=Ledger("t"))
-    td(jnp.ones(10))
-    td(jnp.ones(1000))
-    assert td.stats.host_calls == 1 and td.stats.device_calls == 1
-    td.stats = DispatchStats()           # old reset idiom writes through
-    assert td.stats.host_calls == 0 and td.stats.device_calls == 0
-    td(jnp.ones(1000))
-    assert td.stats.device_calls == 1
+def test_retired_shims_not_exported_from_core():
+    import repro.core as core
+    for retired in ("TargetDispatch", "DispatchStats", "offload",
+                    "UnifiedExecutor", "DiscreteExecutor", "HostExecutor",
+                    "make_executor", "BaseExecutor"):
+        assert not hasattr(core, retired), \
+            f"repro.core still exports retired shim {retired}"
 
 
-def test_target_dispatch_size_fn_override_respected():
-    td = TargetDispatch(lambda x: x + 1, cutoff=100, ledger=Ledger("t"))
-    td.size_fn = lambda args, kwargs: 0      # route everything to host
-    td(jnp.ones(1000))
-    assert td.stats.host_calls == 1 and td.stats.device_calls == 0
+def test_size_fn_override_respected():
+    """Post-construction size_fn overrides must keep steering routing (the
+    pre-regions dispatcher read size_fn on every call)."""
+    ldg = Ledger("t")
+
+    @region("f", ledger=ldg)
+    def f(x):
+        return x + 1
+
+    ex = Executor(AdaptivePolicy(cutoff=100), ldg)
+    f.size_fn = lambda args, kwargs: 0       # route everything to host
+    ex.run(f, jnp.ones(1000))
+    r = ldg.regions["f"]
+    assert r.host_calls == 1 and r.device_calls == 0
 
 
-def test_target_dispatch_shim_shares_ledger():
+def test_adaptive_executor_shares_ledger_with_staging_metrics():
     ldg = Ledger("shared")
-    td = TargetDispatch(lambda x: x + 1, cutoff=100, name="f", ledger=ldg)
-    td(jnp.ones(10))
-    td(jnp.ones(1000))
+
+    @region("f", ledger=ldg)
+    def f(x):
+        return x + 1
+
+    ex = Executor(AdaptivePolicy(cutoff=100), ldg)
+    ex.run(f, jnp.ones(10))
+    ex.run(f, jnp.ones(1000))
     rep = ldg.coverage_report()
     assert rep["host_calls"] == 1 and rep["device_calls"] == 1
     assert "staging_fraction" in rep      # same report as staging metrics

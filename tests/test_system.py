@@ -70,13 +70,13 @@ def test_unified_beats_discrete_on_cfd():
 
     from repro.cfd.grid import Grid
     from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
-    from repro.core.executors import DiscreteExecutor, UnifiedExecutor
+    from repro.core.regions import (DiscretePolicy, Executor, UnifiedPolicy)
 
     cfg = SimpleConfig(grid=Grid((16, 16, 16)), nu=0.1, inner_max=15)
     fom = {}
-    for name, ex_cls in (("unified", UnifiedExecutor),
-                         ("discrete", DiscreteExecutor)):
-        app = SimpleFoam(cfg, executor=ex_cls())
+    for name, make_pol in (("unified", UnifiedPolicy),
+                           ("discrete", DiscretePolicy)):
+        app = SimpleFoam(cfg, executor=Executor(make_pol()))
         st = init_state(cfg)
         st, _, _ = app.run_steps(st, 1)          # warm compile caches
         app.ledger.reset_timings()

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Retired-shim import gate.
+
+``repro.core.dispatch`` and ``repro.core.executors`` are retired
+deprecation-alias stubs for *external* pre-regions callers only: nothing
+inside this repo may import or reference them.  This gate greps every
+Python source (src, tests, benchmarks, examples, tools) for the retired
+module paths and fails if any file other than the two stubs themselves
+mentions them — the regions API is the only offload path in the repo.
+
+  python tools/check_retired_imports.py      # exit 1 on any violation
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: the retired module paths — dotted/slashed spellings ("repro.core.dispatch",
+#: "repro/core/executors") AND the from-import spelling
+#: ("from repro.core import dispatch, executors as e")
+RETIRED = re.compile(
+    r"repro[./]core[./](dispatch|executors)\b"
+    r"|from\s+repro\.core\s+import\s[^#\n]*\b(dispatch|executors)\b")
+
+#: the alias stubs themselves, plus this gate
+ALLOWED = {
+    Path("src/repro/core/dispatch.py"),
+    Path("src/repro/core/executors.py"),
+    Path("tools/check_retired_imports.py"),
+}
+
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def check() -> int:
+    violations = []
+    for top in SCAN_DIRS:
+        for path in sorted((ROOT / top).rglob("*.py")):
+            rel = path.relative_to(ROOT)
+            if rel in ALLOWED or "__pycache__" in path.parts:
+                continue
+            for lineno, line in enumerate(
+                    path.read_text(errors="replace").splitlines(), 1):
+                if RETIRED.search(line):
+                    violations.append((rel, lineno, line.strip()))
+    for rel, lineno, line in violations:
+        print(f"{rel}:{lineno}: retired module reference: {line}")
+    if violations:
+        print(f"\n{len(violations)} reference(s) to retired shim modules; "
+              "use repro.core.regions (see ARCHITECTURE.md migration notes).")
+        return 1
+    print("retired-shim imports ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check())
