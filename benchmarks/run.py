@@ -387,6 +387,106 @@ def fig_serve(batch: int = 2, prompt_len: int = 12, gen: int = 8,
     return reports
 
 
+def fig_traffic(requests: int = 8, slots: int = 4, rate: float = 2.0,
+                out_json: str = "artifacts/traffic/fig_traffic.json"):
+    """Continuous-batching traffic figure (docs/SERVING.md).
+
+    Seeded Poisson arrivals with ragged prompt/gen lengths pushed through
+    the ``ServeEngine`` (slot scheduler + paged KV over the region spine)
+    under unified / discrete / offloaded-KV policies, against two
+    references on the SAME traffic:
+
+    * ``sequential``: the engine with one slot — solo decodes in arrival
+      order through the identical spine; the continuous-batching win is
+      engine tokens/s strictly above this (asserted);
+    * the solo jit path (``build_server`` + ``decode_stream``): the
+      bit-parity oracle — every engine token sequence must match it
+      exactly, under every policy (asserted).
+
+    A final run caps the device page budget below one parked prefill so
+    the paged store spills to host DRAM mid-traffic: the artifact records
+    pages spilled/fetched and the device high-water, and parity must
+    survive the crossing (the paper's oversubscription story applied to
+    serving)."""
+    from repro.configs.reduced import reduced as make_reduced
+    from repro.configs.registry import get_config
+    from repro.core.ledger import Ledger
+    from repro.core.regions import Executor
+    from repro.launch import serve as SV
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.launch.policy import lm_policy
+    from repro.models import transformer as T
+    from repro.serve import (PagedKVCache, ServeEngine, make_traffic,
+                             run_traffic, solo_reference)
+    from repro.serve.traffic import assert_parity
+
+    cfg = make_reduced(get_config("tinyllama-1.1b"))
+    mesh = make_smoke_mesh()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    max_len = 18                                 # fits 10-prompt + 8-gen
+
+    def traffic():
+        return make_traffic(seed=3, n_requests=requests, vocab=cfg.vocab,
+                            arrival_rate=rate, prompt_lens=(6, 10),
+                            gen_lens=(1, 5, 8))
+
+    reqs0 = traffic()
+    oracle, solo_wall = solo_reference(cfg, mesh, params, reqs0, max_len)
+    n_tokens = sum(len(v) for v in oracle.values())
+    solo_tps = n_tokens / max(solo_wall, 1e-9)
+
+    def run(name, policy, n_slots, **kv_kwargs):
+        ex = Executor(policy, Ledger(f"traffic_{name}"))
+        kv = PagedKVCache(page_tokens=4, **kv_kwargs)
+        eng = ServeEngine(cfg, mesh, params, ex, max_len=max_len,
+                          n_slots=n_slots, kv=kv)
+        reqs = traffic()
+        metrics = run_traffic(eng, reqs)
+        assert_parity(reqs, oracle)              # the invariant, per policy
+        rep = ex.ledger.coverage_report()
+        rec = {**metrics, "n_slots": n_slots, "kv": kv.stats.as_dict(),
+               "serve": rep.get("serve", {}),
+               "pools": {k: v for k, v in rep.get("pools", {}).items()}}
+        row(f"fig_traffic/{name}",
+            metrics["wall_s"] * 1e6 / max(metrics["tokens"], 1),
+            f"tokens_per_s={metrics['tokens_per_s']:.0f}"
+            f";occupancy={rep['serve'].get('slot_occupancy', 0):.2f}"
+            f";evictions={metrics['evictions']}"
+            f";spilled={kv.stats.pages_spilled};parity=exact")
+        return rec
+
+    results = {"sequential": run("sequential",
+                                 lm_policy("unified", cfg.memory), 1)}
+    for name, pol in (
+            ("unified", lm_policy("unified", cfg.memory)),
+            ("discrete", lm_policy("discrete", cfg.memory)),
+            ("offload_kv", lm_policy("unified", cfg.memory,
+                                     placer=SV.offload_kv_cache(
+                                         min_bytes=0)))):
+        results[name] = run(name, pol, slots)
+
+    # the continuous-batching claim: batched slots beat sequential solo
+    # decodes through the identical spine on the identical traffic
+    assert results["unified"]["tokens_per_s"] > \
+        results["sequential"]["tokens_per_s"], \
+        (results["unified"]["tokens_per_s"],
+         results["sequential"]["tokens_per_s"])
+
+    # oversubscription: device page budget below one parked prefill
+    results["spill"] = run("spill", lm_policy("unified", cfg.memory),
+                           slots, device_budget_bytes=512)
+    assert results["spill"]["kv"]["pages_spilled"] > 0
+
+    out = Path(out_json)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(
+        {"requests": requests, "slots": slots, "rate": rate,
+         "solo_jit_tokens_per_s": solo_tps, "runs": results},
+        indent=1, default=str))
+    print(f"[bench] wrote traffic figure to {out}", flush=True)
+    return results
+
+
 def pool_bench(n: int = 200, shape=(1 << 20,)):
     """Umpire pooling (paper §5): alloc+touch latency, pooled vs malloc."""
     from repro.core.pool import HostStagingPool
@@ -542,6 +642,7 @@ BENCHES = {
     "fig_variants": fig_variants,
     "fig4_coverage": fig4_coverage,
     "fig_serve": fig_serve,
+    "fig_traffic": fig_traffic,
     "pool": pool_bench,
     "dispatch": dispatch_bench,
     "kernel": kernel_bench,

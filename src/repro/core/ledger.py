@@ -76,6 +76,15 @@ class Ledger:
     def __init__(self, name: str = "default"):
         self.name = name
         self.regions: Dict[str, RegionRecord] = {}
+        # serving-engine accounting (repro.serve): scheduler decisions land
+        # here so coverage_report() carries the serve story next to the
+        # region rows it is made of.  Counters sum on merge; gauges
+        # (occupancy, high-water bytes) take the max.
+        self.serve_counters: Dict[str, float] = {}
+        self.serve_gauges: Dict[str, float] = {}
+        # pools attached for byte-level accounting (paper C4): their live
+        # PoolStats are snapshotted into every coverage_report()
+        self._pools: Dict[str, object] = {}
 
     def region(self, name: str, offloaded: bool = True) -> RegionRecord:
         if name not in self.regions:
@@ -126,6 +135,23 @@ class Ledger:
         """Store a calibrated TARGET_CUT_OFF with the region it governs."""
         self.region(name).cutoff = cutoff
 
+    # -- serving-engine accounting (repro.serve) -----------------------
+    def serve_record(self, event: str, n: float = 1) -> None:
+        """Count one scheduler decision (``admitted``, ``retired``,
+        ``evicted``, ...) into the report's ``serve`` section."""
+        self.serve_counters[event] = self.serve_counters.get(event, 0) + n
+
+    def serve_gauge(self, key: str, value: float) -> None:
+        """Record a level (slot occupancy, KV page high-water bytes).
+        Gauges keep the maximum seen — every caller passes its own running
+        value, the ledger keeps the peak."""
+        self.serve_gauges[key] = max(self.serve_gauges.get(key, value), value)
+
+    def attach_pool(self, name: str, pool) -> None:
+        """Surface a pool's byte-level PoolStats in coverage_report()
+        (``pools`` section).  Re-attaching under the same name replaces."""
+        self._pools[name] = pool
+
     def set_calibrated_variant(self, name: str, target: str, bucket: int,
                                winner: str) -> None:
         """Store an autotuned variant winner for one (target, size-bucket)
@@ -144,6 +170,8 @@ class Ledger:
             r.host_elems = r.device_elems = 0
             r.impl_counts = {}          # per-call record; calibrated_variants
             #                             and cutoff persist like settings
+        self.serve_counters.clear()     # per-run accounting, like timings;
+        self.serve_gauges.clear()       # attached pools persist like settings
 
     def merge_from(self, other: "Ledger") -> None:
         """Accumulate another ledger's rows into this one (rows matched by
@@ -171,6 +199,10 @@ class Ledger:
                 m.calibrated_variants.setdefault(cell, winner)
             if m.cutoff is None:
                 m.cutoff = r.cutoff
+        for k, v in other.serve_counters.items():
+            self.serve_counters[k] = self.serve_counters.get(k, 0) + v
+        for k, v in other.serve_gauges.items():
+            self.serve_gauges[k] = max(self.serve_gauges.get(k, v), v)
 
     @classmethod
     def merged(cls, ledgers, name: str = "node") -> "Ledger":
@@ -185,6 +217,9 @@ class Ledger:
         programs against one shared ledger (auto-uniquified names grow it)
         should clear between generations — or give each app its own Ledger."""
         self.regions.clear()
+        self.serve_counters.clear()
+        self.serve_gauges.clear()
+        self._pools.clear()
 
     # ------------------------------------------------------------------
     def coverage_report(self) -> dict:
@@ -214,7 +249,22 @@ class Ledger:
         for cells in calibrated.values():
             for winner in cells.values():
                 variant_wins[winner] = variant_wins.get(winner, 0) + 1
+        extra: Dict[str, dict] = {}
+        if self.serve_counters or self.serve_gauges:
+            # serving engine (repro.serve): scheduler counters + gauges
+            extra["serve"] = {**self.serve_counters, **self.serve_gauges}
+        if self._pools:
+            # byte-level pool accounting (paper C4): live PoolStats snapshot
+            pools = {}
+            for pname, pool in self._pools.items():
+                st = pool.stats.as_dict()
+                fb = getattr(pool, "free_bytes", None)
+                if fb is not None:
+                    st["free_bytes"] = fb
+                pools[pname] = st
+            extra["pools"] = pools
         return {
+            **extra,
             "regions": len(self.regions),
             "offloaded_regions": sum(1 for r in self.regions.values()
                                      if r.offloaded),

@@ -47,12 +47,18 @@ class PoolStats:
     unpooled: int = 0
     bytes_reused: int = 0
     bytes_allocated: int = 0
-    high_water_bytes: int = 0
+    high_water_bytes: int = 0           # peak pool footprint: in-use + free
+    bytes_in_use: int = 0               # currently acquired, not yet released
 
     @property
     def hit_rate(self) -> float:
         t = self.hits + self.misses
         return self.hits / t if t else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        return d
 
 
 class HostStagingPool:
@@ -86,6 +92,7 @@ class HostStagingPool:
                 self.stats.misses += 1
                 self.stats.bytes_allocated += cls
             self._outstanding_bytes += cls
+            self.stats.bytes_in_use = self._outstanding_bytes
             self.stats.high_water_bytes = max(self.stats.high_water_bytes,
                                               self._outstanding_bytes
                                               + self._free_bytes_locked())
@@ -103,6 +110,7 @@ class HostStagingPool:
         with self._lock:
             self._free.setdefault(cls, []).append(raw)
             self._outstanding_bytes -= cls
+            self.stats.bytes_in_use = self._outstanding_bytes
             if self.max_bytes is not None:
                 self._trim_locked()
 
@@ -133,6 +141,7 @@ class DeviceBufferPool:
         # async lookahead staging acquires from a prefetch thread while the
         # main thread releases — free-list mutation must be atomic
         self._lock = threading.Lock()
+        self._free_bytes = 0
         self.stats = PoolStats()
         try:
             self._default_kind = jax.devices()[0].default_memory().kind
@@ -180,14 +189,18 @@ class DeviceBufferPool:
             return self._jax.device_put(buf, sharding) \
                 if sharding is not None else buf
         key = self._key(shape, dtype, memory_kind, sharding)
+        nbytes = elems * np.dtype(dtype).itemsize
         with self._lock:
             bucket = self._free.get(key)
             if bucket:
                 self.stats.hits += 1
-                self.stats.bytes_reused += elems * np.dtype(dtype).itemsize
+                self.stats.bytes_reused += nbytes
+                self._free_bytes -= nbytes
+                self._account_acquire_locked(nbytes)
                 return bucket.pop()
             self.stats.misses += 1
-            self.stats.bytes_allocated += elems * np.dtype(dtype).itemsize
+            self.stats.bytes_allocated += nbytes
+            self._account_acquire_locked(nbytes)
         buf = jnp.zeros(shape, dtype)
         if sharding is not None:
             buf = self._jax.device_put(buf, sharding)
@@ -196,6 +209,12 @@ class DeviceBufferPool:
             sh = self._jax.sharding.SingleDeviceSharding(d, memory_kind=memory_kind)
             buf = self._jax.device_put(buf, sh)
         return buf
+
+    def _account_acquire_locked(self, nbytes: int) -> None:
+        self.stats.bytes_in_use += nbytes
+        self.stats.high_water_bytes = max(self.stats.high_water_bytes,
+                                          self.stats.bytes_in_use
+                                          + self._free_bytes)
 
     def release(self, buf) -> None:
         try:
@@ -206,8 +225,20 @@ class DeviceBufferPool:
             return
         if int(np.prod(buf.shape) if buf.shape else 1) < self.min_elems:
             return
+        nbytes = int(buf.nbytes)
         with self._lock:
             self._free.setdefault(key, []).append(buf)
+            self._free_bytes += nbytes
+            # releases may hand back a same-sized buffer that OWNS pooled
+            # storage (a donating-copy result) rather than the acquired
+            # object itself — byte symmetry holds, so floor at zero only
+            # defends against releases the pool never saw acquired
+            self.stats.bytes_in_use = max(0, self.stats.bytes_in_use - nbytes)
+
+    @property
+    def free_bytes(self) -> int:
+        with self._lock:
+            return self._free_bytes
 
 
 class BufferRotation:

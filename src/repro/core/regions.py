@@ -870,6 +870,14 @@ class Executor:
         self.policy = policy
         self.ledger = ledger or Ledger(policy.name)
         self.mode = policy.name
+        # staging policies carry pools — attach them so coverage_report()
+        # surfaces byte-level pool accounting next to the staging fractions
+        stager = getattr(policy, "stager", None)
+        for pool_name, attr in (("host_staging", "host_pool"),
+                                ("device_buffer", "device_pool")):
+            pool = getattr(stager, attr, None)
+            if pool is not None:
+                self.ledger.attach_pool(pool_name, pool)
         # region -> (ledger -> row name), weak at both levels: entries die
         # with their region/ledger instead of pinning compiled executables
         # for the executor's lifetime, and object identity (not id()) rules

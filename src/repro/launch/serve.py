@@ -230,17 +230,22 @@ def build_server(cfg, mesh, batch: int, max_len: int, q_chunk=256,
 
 def decode_stream(decode, params, tok, cache, prompt_len: int, gen: int,
                   sync_every: int = 0):
-    """Greedy decode on the raw jit path, syncing once per ``sync_every``
-    tokens (0 = once at end of stream).  A per-token
-    ``jax.block_until_ready`` serializes the stream — dispatch of token
-    *i+1* cannot start until *i* has fully materialized; syncing per
-    report interval reclaims that latency (measured by ``fig_serve``)."""
+    """Greedy decode on the raw jit path with interval syncing.
+
+    ``sync_every <= 0`` means *never* sync mid-stream: the whole stream
+    dispatches asynchronously and blocks exactly once on the final token —
+    the maximally-overlapped default.  (Before this was pinned down, a
+    negative value fell through the modulo and silently behaved like the
+    per-token sync.)  ``sync_every = 1`` is that retired per-token
+    ``jax.block_until_ready`` — dispatch of token *i+1* cannot start until
+    *i* has fully materialized; larger intervals reclaim the latency one
+    report interval at a time (measured by ``fig_serve``)."""
     toks = [tok]
     for i in range(gen - 1):
         logits, cache = decode(params, tok, cache, jnp.int32(prompt_len + i))
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         toks.append(tok)
-        if sync_every and (i + 1) % sync_every == 0:
+        if sync_every > 0 and (i + 1) % sync_every == 0:
             jax.block_until_ready(tok)
     jax.block_until_ready(toks[-1])
     return toks, cache
@@ -326,6 +331,50 @@ def _prefill_inputs(cfg, args, prompts):
     return batch
 
 
+def _engine_demo(cfg, mesh, params, ex, args, max_len):
+    """Continuous-batching engine under the launcher flags: seeded Poisson
+    traffic with ragged prompt/gen lengths through
+    :class:`repro.serve.ServeEngine`, bit-parity asserted against solo jit
+    decodes of the same prompts (docs/SERVING.md)."""
+    # lazy import: repro.serve runs ON this module's regions and programs
+    from repro.serve import (PagedKVCache, ServeEngine, make_traffic,
+                             run_traffic, solo_reference)
+    from repro.serve.traffic import assert_parity
+
+    kv = PagedKVCache(page_tokens=args.page_tokens,
+                      device_budget_bytes=args.kv_device_budget or None,
+                      total_budget_bytes=args.kv_total_budget or None)
+    engine = ServeEngine(cfg, mesh, params, ex, max_len=max_len,
+                         n_slots=args.slots, kv=kv)
+    lens = sorted({max(2, args.prompt_len // 2), args.prompt_len})
+    gens = sorted({1, max(2, args.gen // 2), args.gen})
+    reqs = make_traffic(args.seed, args.requests, cfg.vocab,
+                        arrival_rate=args.rate, prompt_lens=lens,
+                        gen_lens=gens)
+    metrics = run_traffic(engine, reqs)
+    oracle, solo_wall = solo_reference(cfg, mesh, params, reqs, max_len,
+                                       offload_kv=args.offload_kv)
+    assert_parity(reqs, oracle)        # the acceptance invariant
+    solo_tps = metrics["tokens"] / max(solo_wall, 1e-9)
+    st = kv.stats
+    spill_note = (f"; {st.pages_spilled} pages spilled to host"
+                  f" ({st.pages_fetched} fetched back)"
+                  if st.pages_spilled else "")
+    evict_note = f"; {st.evictions} evictions" if st.evictions else ""
+    print(f"[serve] engine {args.arch}"
+          f"{' (reduced)' if args.reduced else ''} [{ex.mode}]: "
+          f"{metrics['requests']} requests / {metrics['tokens']} tokens in "
+          f"{metrics['wall_s']*1e3:.1f} ms — {metrics['tokens_per_s']:.0f} "
+          f"tok/s engine vs {solo_tps:.0f} tok/s sequential solo jit; "
+          f"p50 {metrics.get('p50_token_ms', 0.0):.2f} / p99 "
+          f"{metrics.get('p99_token_ms', 0.0):.2f} ms/token; KV page "
+          f"high-water {st.device_high_water_bytes} B device"
+          f"{spill_note}{evict_note}; parity OK vs solo jit")
+    if args.report:
+        print(json.dumps(ex.report(), indent=1, default=str))
+    return metrics
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
@@ -343,9 +392,31 @@ def main(argv=None):
                     help="print the run's coverage_report() as JSON")
     ap.add_argument("--sync-every", type=int, default=0, metavar="K",
                     help="jit streaming path: block_until_ready once per K "
-                         "tokens (0 = end of stream; 1 = the retired "
-                         "per-token sync)")
+                         "tokens; K <= 0 = never sync mid-stream, one "
+                         "final sync at end of stream; 1 = the retired "
+                         "per-token sync")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine instead of the static "
+                         "batch: Poisson traffic through slot-scheduled "
+                         "decode over a paged KV cache, bit-parity "
+                         "asserted vs solo jit decodes (docs/SERVING.md); "
+                         "composes with any --policy and --offload-kv")
+    ap.add_argument("--slots", type=int, default=4, metavar="N",
+                    help="engine decode slots (the vmapped tick width)")
+    ap.add_argument("--requests", type=int, default=8, metavar="N",
+                    help="engine traffic size (seeded by --seed)")
+    ap.add_argument("--rate", type=float, default=1.0, metavar="R",
+                    help="engine mean arrivals per tick (Poisson)")
+    ap.add_argument("--page-tokens", type=int, default=8, metavar="T",
+                    help="engine KV page size along the token axis")
+    ap.add_argument("--kv-device-budget", type=int, default=0, metavar="B",
+                    help="engine paged-KV device budget in bytes; exceeding "
+                         "it spills LRU entries to host DRAM (0 = "
+                         "unlimited)")
+    ap.add_argument("--kv-total-budget", type=int, default=0, metavar="B",
+                    help="engine paged-KV total budget in bytes; exceeding "
+                         "it evicts+requeues LRU requests (0 = unlimited)")
     ap.add_argument("--replay-batch", type=int, default=0, metavar="N",
                     help="also push N stacked request groups through the "
                          "captured decode program "
@@ -359,6 +430,9 @@ def main(argv=None):
     if args.mesh and not args.replay_batch:
         raise SystemExit("--mesh requires --replay-batch N (it shards the "
                          "batched decode program)")
+    if args.engine and (args.replay_batch or args.mesh):
+        raise SystemExit("--engine replaces the static batch paths; it "
+                         "does not compose with --replay-batch/--mesh")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -372,6 +446,8 @@ def main(argv=None):
                   Ledger("serve"))
     key = jax.random.PRNGKey(args.seed)
     params = T.init(key, cfg)
+    if args.engine:
+        return _engine_demo(cfg, mesh, params, ex, args, max_len)
     regions = make_serve_regions(cfg, mesh, params, ledger=ex.ledger)
 
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,

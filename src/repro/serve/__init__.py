@@ -1,0 +1,20 @@
+"""Continuous-batching serving engine on the region-program spine.
+
+Three layers (docs/SERVING.md):
+
+* :mod:`repro.serve.paged_kv` — fixed-size KV pages drawn from a
+  :class:`~repro.core.pool.DeviceBufferPool`, LRU host spill / eviction
+  through the placement axis (paper C1 + C4).
+* :mod:`repro.serve.scheduler` — slot-based request scheduler driving the
+  captured PREFILL / DECODE_STEP / KV_APPEND regions, accounting every
+  decision on the shared :class:`~repro.core.ledger.Ledger`.
+* :mod:`repro.serve.traffic` — seeded synthetic traffic (Poisson arrivals,
+  ragged lengths) plus the solo-jit parity oracle the engine is measured
+  against (``fig_traffic`` in benchmarks/run.py).
+"""
+from repro.serve.paged_kv import PagedKVCache, PagedKVStats
+from repro.serve.scheduler import Request, ServeEngine
+from repro.serve.traffic import make_traffic, run_traffic, solo_reference
+
+__all__ = ["PagedKVCache", "PagedKVStats", "Request", "ServeEngine",
+           "make_traffic", "run_traffic", "solo_reference"]

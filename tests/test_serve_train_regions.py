@@ -372,3 +372,70 @@ def test_train_main_report_emits_coverage(capsys):
     assert rep["mode"] == "unified"
     assert rep["impl_counts"].get("ref", 0) == 4      # 2 regions x 2 steps
     assert rep["device_fraction"] > 0
+
+
+# ---------------------------------------------------------------------------
+# KVCachePlacer edge cases: the min_bytes boundary, role misses, idempotence
+# ---------------------------------------------------------------------------
+
+def _recording_place(monkeypatch):
+    """Record which leaves tree_place actually offers to umem.place — the
+    size gate lives inside tree_place, so this sees its decisions."""
+    import repro.core.umem as U
+    offered = []
+
+    def rec(x, space, device=None):
+        offered.append(x)
+        return x
+
+    monkeypatch.setattr(U, "place", rec)
+    return offered
+
+
+def test_kv_placer_leaf_exactly_at_min_bytes_moves(monkeypatch):
+    """The threshold is `nbytes < min_bytes stays`: a leaf exactly AT the
+    boundary crosses (the paper's 'pool above 5K elements' cut applied to
+    placement is inclusive on the budget side)."""
+    host = preferred_host_space()
+    if host is None:
+        pytest.skip("no host memory space on this platform")
+    offered = _recording_place(monkeypatch)
+    at = jnp.ones((8,), jnp.float32)            # 32 bytes == min_bytes
+    below = jnp.ones((7,), jnp.float32)         # 28 bytes  < min_bytes
+    cache = {"k": at, "v": below, "pos": jnp.ones((64,), jnp.int32)}
+    out = SV.place_kv_leaves(cache, host, min_bytes=32)
+    assert len(offered) == 1 and offered[0] is at
+    assert out["v"] is below                    # skipped leaf: same object
+    assert out["pos"] is cache["pos"]           # non-kv role: never offered
+
+
+def test_kv_placer_no_kv_leaves_is_identity(monkeypatch):
+    """A tree with no k/v-keyed leaves comes back leaf-identical — the
+    role keying never touches (or copies) bystander state."""
+    host = preferred_host_space()
+    if host is None:
+        pytest.skip("no host memory space on this platform")
+    offered = _recording_place(monkeypatch)
+    tree = {"x_cm": jnp.ones((4, 64)), "pos": jnp.ones((16,), jnp.int32),
+            "nested": {"state": jnp.zeros((2, 8))}}
+    out = SV.place_kv_leaves(tree, host, min_bytes=0)
+    assert not offered
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert a is b
+
+
+def test_kv_placer_idempotent_when_already_in_host_space():
+    """Placing twice is placing once: the second pass is a memory-kind
+    no-op and values never change (place never rewrites data)."""
+    from repro.core.umem import space_of
+    host = preferred_host_space()
+    if host is None:
+        pytest.skip("no host memory space on this platform")
+    cache = {"k": jnp.arange(64, dtype=jnp.float32).reshape(4, 16),
+             "v": jnp.ones((4, 16)), "pos": jnp.ones((16,), jnp.int32)}
+    once = SV.place_kv_leaves(cache, host, min_bytes=0)
+    twice = SV.place_kv_leaves(once, host, min_bytes=0)
+    assert space_of(twice["k"]) == host.kind
+    assert space_of(twice["v"]) == host.kind
+    for a, b in zip(jax.tree.leaves(twice), jax.tree.leaves(cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

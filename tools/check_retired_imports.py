@@ -1,12 +1,19 @@
 #!/usr/bin/env python
-"""Retired-shim import gate.
+"""Retired-shim / CLI-only import gate.
 
-``repro.core.dispatch`` and ``repro.core.executors`` are retired
-deprecation-alias stubs for *external* pre-regions callers only: nothing
-inside this repo may import or reference them.  This gate greps every
-Python source (src, tests, benchmarks, examples, tools) for the retired
-module paths and fails if any file other than the two stubs themselves
-mentions them — the regions API is the only offload path in the repo.
+Two classes of names nothing in this repo may import:
+
+* ``repro.core.dispatch`` and ``repro.core.executors`` — retired
+  deprecation-alias stubs for *external* pre-regions callers only; the
+  regions API is the only offload path in the repo.
+* ``replay_batch_demo`` — the heavy-traffic CLI demo inside
+  ``repro.launch.serve``.  It is a driver endpoint, not a library:
+  library code wanting batched decode uses ``RegionProgram.replay_batch``
+  directly, and the continuous-batching path is ``repro.serve``
+  (docs/SERVING.md).
+
+This gate greps every Python source (src, tests, benchmarks, examples,
+tools) and fails on any reference outside each rule's allow-list.
 
   python tools/check_retired_imports.py      # exit 1 on any violation
 """
@@ -18,41 +25,60 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 
-#: the retired module paths — dotted/slashed spellings ("repro.core.dispatch",
-#: "repro/core/executors") AND the from-import spelling
-#: ("from repro.core import dispatch, executors as e")
-RETIRED = re.compile(
-    r"repro[./]core[./](dispatch|executors)\b"
-    r"|from\s+repro\.core\s+import\s[^#\n]*\b(dispatch|executors)\b")
-
-#: the alias stubs themselves, plus this gate
-ALLOWED = {
-    Path("src/repro/core/dispatch.py"),
-    Path("src/repro/core/executors.py"),
-    Path("tools/check_retired_imports.py"),
-}
+#: (pattern, allowed files, label, remedy) — allowed covers the
+#: definitions themselves plus this gate
+RULES = (
+    (
+        # dotted/slashed spellings ("repro.core.dispatch",
+        # "repro/core/executors") AND the from-import spelling
+        # ("from repro.core import dispatch, executors as e")
+        re.compile(
+            r"repro[./]core[./](dispatch|executors)\b"
+            r"|from\s+repro\.core\s+import\s[^#\n]*\b(dispatch|executors)\b"),
+        {
+            Path("src/repro/core/dispatch.py"),
+            Path("src/repro/core/executors.py"),
+            Path("tools/check_retired_imports.py"),
+        },
+        "retired module reference",
+        "use repro.core.regions (see ARCHITECTURE.md migration notes).",
+    ),
+    (
+        re.compile(r"\breplay_batch_demo\b"),
+        {
+            Path("src/repro/launch/serve.py"),
+            Path("tools/check_retired_imports.py"),
+        },
+        "CLI-only demo reference",
+        "replay_batch_demo is a launch/serve.py driver endpoint; use "
+        "RegionProgram.replay_batch or repro.serve (docs/SERVING.md).",
+    ),
+)
 
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
 
 
 def check() -> int:
-    violations = []
-    for top in SCAN_DIRS:
-        for path in sorted((ROOT / top).rglob("*.py")):
-            rel = path.relative_to(ROOT)
-            if rel in ALLOWED or "__pycache__" in path.parts:
-                continue
-            for lineno, line in enumerate(
-                    path.read_text(errors="replace").splitlines(), 1):
-                if RETIRED.search(line):
-                    violations.append((rel, lineno, line.strip()))
-    for rel, lineno, line in violations:
-        print(f"{rel}:{lineno}: retired module reference: {line}")
-    if violations:
-        print(f"\n{len(violations)} reference(s) to retired shim modules; "
-              "use repro.core.regions (see ARCHITECTURE.md migration notes).")
+    failed = False
+    for pattern, allowed, label, remedy in RULES:
+        violations = []
+        for top in SCAN_DIRS:
+            for path in sorted((ROOT / top).rglob("*.py")):
+                rel = path.relative_to(ROOT)
+                if rel in allowed or "__pycache__" in path.parts:
+                    continue
+                for lineno, line in enumerate(
+                        path.read_text(errors="replace").splitlines(), 1):
+                    if pattern.search(line):
+                        violations.append((rel, lineno, line.strip()))
+        for rel, lineno, line in violations:
+            print(f"{rel}:{lineno}: {label}: {line}")
+        if violations:
+            print(f"\n{len(violations)} {label}(s); {remedy}")
+            failed = True
+    if failed:
         return 1
-    print("retired-shim imports ok")
+    print("retired-shim / CLI-only imports ok")
     return 0
 
 
