@@ -125,54 +125,119 @@ def fig6b_overlap(steps: int = 2, grid=(16, 16, 16)):
     return rep
 
 
+def _scaling_mesh_shape(n: int) -> tuple:
+    """Mesh shape for an n-APU node: near-square 2-D factorization when
+    possible (4 -> 2x2, 8 -> 2x4) to cut surface-to-volume, 1-D
+    otherwise.  FIG_SCALING_MESH=1d forces the 1-D baseline."""
+    import os
+    if os.environ.get("FIG_SCALING_MESH", "auto") == "1d":
+        return (n,)
+    best = 1
+    for d in range(2, int(n ** 0.5) + 1):
+        if n % d == 0:
+            best = d
+    return (best, n // best) if best > 1 else (n,)
+
+
 def fig_scaling(steps: int = 2, grid="8,8,8", policy="unified"):
     """Beyond-paper scaling figure: the captured SIMPLE step replayed
     domain-decomposed over 1/2/4/8 simulated APUs
-    (repro.core.shard_program + repro.launch.scaling).
+    (repro.core.shard_program + repro.launch.scaling), strong- AND
+    weak-scaling, under the overlapped wide-halo exchange schedule.
 
     Each node size runs in a fresh subprocess — the APU count must be in
     XLA_FLAGS before the first jax import, and this process has already
     imported jax with one device.  Every run asserts single- vs
     multi-device numerical parity (docs/DESIGN.md §2 tolerance) and the
-    derived column carries the node-level compute/staging/exchange split
-    from the aggregated per-device ledgers.  On a CPU container all
+    derived column carries the node-level compute/staging/exchange/overlap
+    split from the aggregated per-device ledgers.  On a CPU container all
     "APUs" share the same cores, so the FOM here is the exchange
     accounting and the parity guarantee, not wall-clock speedup (see
-    docs/SCALING.md).  APU counts override via FIG_SCALING_APUS=1,2."""
+    docs/SCALING.md).
+
+    Regression gate (CI): every multi-APU run must keep its EXPOSED
+    exchange fraction under the pinned budget and, under the overlapped
+    schedule, must actually hide exchange time (``overlap_s > 0``) — the
+    halo-exchange-tax fix is locked in here.  Knobs: FIG_SCALING_APUS=1,2
+    FIG_SCALING_GRID=16,16,16 FIG_SCALING_SCHEDULE=overlap|sequential|split
+    FIG_SCALING_HALO=2 FIG_SCALING_MESH=auto|1d FIG_SCALING_BUDGET=0.15."""
     import os
     import subprocess
     import sys
     apus = [int(x) for x in
             os.environ.get("FIG_SCALING_APUS", "1,2,4,8").split(",") if x]
-    base_n, base = apus[0], None        # ratio column anchors on the
-    for n in apus:                      # first (smallest) node size run
-        out = Path(f"artifacts/scaling/apu{n}.json")
+    grid = os.environ.get("FIG_SCALING_GRID", grid)
+    schedule = os.environ.get("FIG_SCALING_SCHEDULE", "overlap")
+    halo_mult = os.environ.get("FIG_SCALING_HALO", "2")
+    budget = float(os.environ.get("FIG_SCALING_BUDGET", "0.15"))
+    base_grid = tuple(int(g) for g in grid.split(","))
+
+    def run_one(n, grid_t, out_name, row_name, base):
+        mesh_shape = _scaling_mesh_shape(n)
+        out = Path(f"artifacts/scaling/{out_name}.json")
         out.parent.mkdir(parents=True, exist_ok=True)
         cmd = [sys.executable, "-m", "repro.launch.scaling",
-               "--apus", str(n), "--steps", str(steps), "--grid", grid,
-               "--policy", policy, "--inner-max", "6", "--out", str(out)]
+               "--apus", str(n), "--mesh",
+               "x".join(str(s) for s in mesh_shape),
+               "--steps", str(steps),
+               "--grid", ",".join(str(g) for g in grid_t),
+               "--policy", policy, "--schedule", schedule,
+               "--halo-multiplier", halo_mult,
+               "--inner-max", "6", "--out", str(out)]
         r = subprocess.run(cmd, capture_output=True, text=True)
         if r.returncode != 0:
-            row(f"fig_scaling/apus{n}", 0.0,
+            row(row_name, 0.0,
                 f"FAILED rc={r.returncode}:{r.stderr.strip()[-160:]}")
             raise RuntimeError(f"fig_scaling subprocess failed for "
                                f"{n} APUs:\n{r.stderr[-2000:]}")
         rec = json.loads(out.read_text())
         assert rec["parity_ok"], rec          # acceptance criterion
         rep = rec["report"]
-        if base is None:
-            base = rec["fom_sharded_s"]
         dev0 = rep["per_device"][0]
-        row(f"fig_scaling/apus{n}", rec["fom_sharded_s"] * 1e6,
+        row(row_name, rec["fom_sharded_s"] * 1e6,
             f"parity_max_err={rec['parity_max_abs_err']:.2e}"
+            f";mesh={'x'.join(str(s) for s in rec['mesh_shape'])}"
             f";compute_s={rep['compute_s']:.4f}"
             f";staging_s={rep['staging_s']:.4f}"
             f";exchange_s={rep['exchange_s']:.4f}"
+            f";overlap_s={rep['overlap_s']:.4f}"
             f";exchange_fraction={rep['exchange_fraction']:.3f}"
             f";exchange_bytes={rep['exchange_bytes']}"
             f";dev0_compute_s={dev0['compute_s']:.4f}"
             f";dev0_exchange_s={dev0['exchange_s']:.4f}"
-            f";vs_{base_n}apu=x{rec['fom_sharded_s'] / max(base, 1e-12):.2f}")
+            f";vs_base=x{rec['fom_sharded_s'] / max(base or rec['fom_sharded_s'], 1e-12):.2f}")
+        if n > 1:
+            # the regression gate: exposed exchange stays under the pinned
+            # budget, and the overlapped schedule actually hides time
+            assert rep["exchange_fraction"] <= budget, (
+                f"exchange_fraction {rep['exchange_fraction']:.3f} over "
+                f"budget {budget} for {n} APUs ({row_name})")
+            if schedule != "sequential":
+                assert rep["overlap_s"] > 0.0, (
+                    f"no exchange overlap recorded for {n} APUs "
+                    f"({row_name}): {rep['overlap_s']}")
+        return rec
+
+    # strong scaling: fixed grid, growing node
+    base = None
+    for n in apus:
+        rec = run_one(n, base_grid, f"apu{n}", f"fig_scaling/apus{n}", base)
+        if base is None:
+            base = rec["fom_sharded_s"]
+
+    # weak scaling: constant cells/APU — the decomposed dims grow with
+    # their mesh axes, so exchange surface per APU stays fixed while node
+    # volume grows (the JSONs land next to the strong-scaling artifacts)
+    wbase = None
+    for n in apus:
+        mesh_shape = _scaling_mesh_shape(n)
+        wgrid = list(base_grid)
+        for dim, s in zip(range(-len(mesh_shape), 0), mesh_shape):
+            wgrid[dim] *= s
+        rec = run_one(n, tuple(wgrid), f"weak_apu{n}",
+                      f"fig_scaling/weak_apus{n}", wbase)
+        if wbase is None:
+            wbase = rec["fom_sharded_s"]
     return apus
 
 

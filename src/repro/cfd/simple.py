@@ -228,17 +228,20 @@ class SimpleFoam:
         return capture(step_fn, st.u, st.v, st.w, st.p, name="simple_step")
 
     def replay_steps(self, prog, st: SimpleState, n: int, executor,
-                     mesh=None) -> tuple:
+                     mesh=None, **shard_opts) -> tuple:
         """Replay a captured step ``n`` times, chaining the state through.
         Returns (state, fom_seconds_per_step).
 
-        ``mesh`` (a 1-D APU mesh from ``repro.launch.mesh.make_apu_mesh``)
-        domain-decomposes the replay across simulated APUs: ``executor``'s
-        policy is rebound into a :class:`~repro.core.shard_program
-        .ShardExecutor` and fields shard along the grid z axis with halo
-        exchange at every stencil region.  This convenience path builds
-        (and discards) the shard executor internally — nothing lands on
-        the passed executor's ledger; pass a pre-built
+        ``mesh`` (an APU mesh from ``repro.launch.mesh.make_apu_mesh`` —
+        1-D, or 2-D/3-D for lower surface-to-volume) domain-decomposes the
+        replay across simulated APUs: ``executor``'s policy is rebound
+        into a :class:`~repro.core.shard_program.ShardExecutor` and fields
+        shard along the trailing grid ax(es) with halo exchange scheduled
+        at every stencil region.  ``shard_opts`` forward to
+        ``ShardExecutor`` (``halo_multiplier``, ``overlap``,
+        ``split_stencil``, ... — docs/SCALING.md).  This convenience path
+        builds (and discards) the shard executor internally — nothing
+        lands on the passed executor's ledger; pass a pre-built
         ``ShardExecutor``/``ShardedProgram`` as ``executor`` instead when
         you need the per-device ledgers afterwards (that is what
         ``repro.launch.scaling`` does)."""
@@ -247,7 +250,7 @@ class SimpleFoam:
                                                   ShardExecutor)
             if not hasattr(executor, "replay_program"):
                 executor = ShardExecutor(
-                    getattr(executor, "policy", None), mesh)
+                    getattr(executor, "policy", None), mesh, **shard_opts)
             elif not isinstance(executor, (ShardExecutor, ShardedProgram)):
                 # an AsyncExecutor etc. would silently replay single-device
                 raise ValueError(

@@ -33,8 +33,9 @@ class RegionRecord:
     host_compute_s: float = 0.0         # region may mix under AdaptivePolicy
     staging_s: float = 0.0              # discrete-emulation copy time
     staging_bytes: int = 0
-    overlap_s: float = 0.0              # staging hidden behind earlier compute
-    #                                     (async lookahead replay; <= staging_s)
+    overlap_s: float = 0.0              # staging/exchange hidden behind compute
+    #                                     (async + sharded overlapped replay;
+    #                                     <= staging_s + exchange_s)
     exchange_s: float = 0.0             # inter-APU halo/boundary traffic time
     exchange_bytes: int = 0             # (sharded replay; Infinity Fabric model)
     host_elems: int = 0                 # routing accounting (was DispatchStats)
@@ -58,7 +59,20 @@ class RegionRecord:
 
     @property
     def total_s(self) -> float:
-        return self.compute_s + self.staging_s + self.exchange_s
+        """Wall-clock this row cost the replay.  Overlapped seconds ran
+        *concurrently* with some region's compute, so counting them again
+        would double-book the node: ``total = compute + staging + exchange
+        - overlap`` (the invariant ``Ledger.merged`` reproduces node-wide;
+        see docs/SCALING.md)."""
+        return (self.compute_s + self.staging_s + self.exchange_s
+                - self.overlap_s)
+
+    @property
+    def exposed_exchange_s(self) -> float:
+        """Exchange seconds NOT hidden behind compute.  Overlap attributes
+        to staging first (the async lookahead's claim), the remainder to
+        exchange (the sharded overlapped schedule's claim)."""
+        return self.exchange_s - max(0.0, self.overlap_s - self.staging_s)
 
     @property
     def offload_fraction(self) -> float:
@@ -67,9 +81,12 @@ class RegionRecord:
 
     @property
     def overlap_fraction(self) -> float:
-        """Fraction of this region's staging time that ran concurrently with
-        another region's compute (Fig 6 mitigation: prefetch overlap)."""
-        return self.overlap_s / self.staging_s if self.staging_s else 0.0
+        """Fraction of this region's hideable time (staging + exchange)
+        that actually ran concurrently with another region's compute
+        (Fig 6 mitigation: prefetch overlap; docs/SCALING.md: halo
+        overlap)."""
+        hideable = self.staging_s + self.exchange_s
+        return self.overlap_s / hideable if hideable else 0.0
 
 
 class Ledger:
@@ -121,7 +138,7 @@ class Ledger:
         r.compute_s += compute_s
         r.staging_s += staging_s
         r.staging_bytes += staging_bytes
-        r.overlap_s += min(overlap_s, staging_s)
+        r.overlap_s += min(overlap_s, staging_s + exchange_s)
         r.exchange_s += exchange_s
         r.exchange_bytes += exchange_bytes
         if device:
@@ -223,6 +240,9 @@ class Ledger:
 
     # ------------------------------------------------------------------
     def coverage_report(self) -> dict:
+        # total_s subtracts overlap_s per row: seconds hidden behind compute
+        # ran concurrently and must not be double-booked into the node wall
+        # (invariant: total == compute + staging + exchange - overlap)
         total = sum(r.total_s for r in self.regions.values())
         # per-side compute, not whole rows: under adaptive routing one region
         # mixes host and device calls, and a single device call must not
@@ -233,6 +253,9 @@ class Ledger:
         staging = sum(r.staging_s for r in self.regions.values())
         overlap = sum(r.overlap_s for r in self.regions.values())
         exchange = sum(r.exchange_s for r in self.regions.values())
+        exposed_exchange = sum(r.exposed_exchange_s
+                               for r in self.regions.values())
+        hideable = staging + exchange
         host_calls = sum(r.host_calls for r in self.regions.values())
         device_calls = sum(r.device_calls for r in self.regions.values())
         host_elems = sum(r.host_elems for r in self.regions.values())
@@ -281,13 +304,19 @@ class Ledger:
             "exchange_s": exchange,
             "exchange_bytes": sum(r.exchange_bytes
                                   for r in self.regions.values()),
-            "exchange_fraction": exchange / total if total else 0.0,
-            # async lookahead replay (repro.core.program): how much of the
-            # staging storm was hidden behind compute, and the seconds saved
-            # vs a fully synchronous replay of the same program
+            # fraction of node wall that is EXPOSED exchange — overlapped
+            # exchange seconds ran behind compute and are excluded (overlap
+            # attributes to staging first, remainder to exchange)
+            "exchange_fraction": exposed_exchange / total if total else 0.0,
+            "exposed_exchange_s": exposed_exchange,
+            # overlapped replay (async lookahead staging + sharded halo
+            # overlap): how much of the hideable time (staging + exchange)
+            # ran behind compute, and the staging seconds saved vs a fully
+            # synchronous replay of the same program
             "overlap_s": overlap,
-            "overlap_fraction": overlap / staging if staging else 0.0,
-            "staging_saved_s": overlap,
+            "overlap_fraction": overlap / hideable if hideable else 0.0,
+            "staging_saved_s": sum(min(r.overlap_s, r.staging_s)
+                                   for r in self.regions.values()),
             # routing accounting (absorbed from dispatch.DispatchStats):
             # every host/device decision — static or TARGET_CUT_OFF-adaptive —
             # lands here, next to the staging fractions it trades against.

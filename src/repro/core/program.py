@@ -361,6 +361,15 @@ class _Prefetch:
     t1: float
 
 
+def interval_overlap(t0: float, t1: float, spans) -> float:
+    """Seconds of the wall interval ``[t0, t1]`` covered by the (disjoint)
+    compute intervals ``spans`` — the shared overlap accounting of the
+    async lookahead replay (staging hidden behind compute) and the sharded
+    overlapped replay (halo exchange hidden behind compute,
+    :mod:`repro.core.shard_program`)."""
+    return sum(max(0.0, min(t1, b1) - max(t0, b0)) for b0, b1 in spans)
+
+
 class AsyncExecutor:
     """Replays :class:`RegionProgram`\\ s under one policy with one-step
     staging lookahead (double-buffered through a
@@ -463,8 +472,8 @@ class AsyncExecutor:
                     if pf:
                         staging_s += pf.seconds
                         staging_b += pf.nbytes
-                        c0, c1 = prev_compute
-                        overlap_s = max(0.0, min(pf.t1, c1) - max(pf.t0, c0))
+                        overlap_s = interval_overlap(pf.t0, pf.t1,
+                                                     (prev_compute,))
                     todo = [(i, leaf) for i, leaf in enumerate(raw)
                             if _is_array(leaf) and i not in staged_map]
                     if todo:

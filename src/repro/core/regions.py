@@ -144,6 +144,18 @@ class Region:                           # hashable, usable as dict/set keys
     donate_args: Optional[Sequence[int]] = None
     ledger: Ledger = dataclasses.field(default_factory=lambda: GLOBAL_LEDGER)
 
+    def stencil_width(self, axis: int) -> int:
+        """Halo reach of this region's declared ``stencil`` along grid
+        ``axis``: the maximum |offset| of any band on that axis, 0 for
+        pointwise regions.  A width-``w`` stencil applied ``k`` times
+        reaches ``k*w`` (``repro.cfd.dia.compose_offsets`` composes the
+        declared tables), which is exactly the ghost-zone depth the
+        wide-halo exchange schedule provisions (docs/SCALING.md)."""
+        if not self.stencil:
+            return 0
+        return max((abs(d) for ax, d in self.stencil if ax == axis),
+                   default=0)
+
     def __post_init__(self):
         if self.size_fn is None:
             self.size_fn = default_size

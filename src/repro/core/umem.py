@@ -112,6 +112,19 @@ def shard_along(mesh, axis_name: str, ndim: int, dim: int):
         mesh, jax.sharding.PartitionSpec(*spec))
 
 
+def shard_along_nd(mesh, assignments, ndim: int):
+    """NamedSharding splitting several array dimensions at once:
+    ``assignments`` maps array dimension (normalized, ``0 <= dim < ndim``)
+    to mesh axis name — the N-D domain decomposition of the multi-APU
+    replay (2-D/3-D meshes cut surface-to-volume, docs/SCALING.md).
+    Unassigned dimensions replicate."""
+    spec = [None] * ndim
+    for dim, axis_name in dict(assignments).items():
+        spec[dim % ndim if ndim else 0] = axis_name
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(*spec))
+
+
 def replicated_sharding(mesh):
     """NamedSharding replicating an array across every mesh device."""
     return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())

@@ -55,15 +55,41 @@ def apu_flags(n_apus: int) -> str:
     return f"--xla_force_host_platform_device_count={n_apus}"
 
 
-def make_apu_mesh(n_apus: int = 1, axis: str = "apu"):
-    """1-D mesh of ``n_apus`` simulated APUs — the node topology of the
-    multi-APU replay (``repro.core.shard_program``).  Each "APU" is one
-    forced host-platform device; the Infinity Fabric between them is the
-    inter-device transfer path XLA partitions collectives onto."""
+def parse_mesh_shape(spec) -> tuple:
+    """Parse a mesh-shape spec: ``4`` / ``"4"`` -> ``(4,)`` (1-D),
+    ``"2x2"`` -> ``(2, 2)``, ``"2x2x2"`` -> ``(2, 2, 2)``.  The CLI
+    surface of the 2-D/3-D domain decomposition (``launch.scaling
+    --mesh``, ``FIG_SCALING_MESH``)."""
+    if isinstance(spec, int):
+        return (spec,)
+    if isinstance(spec, (tuple, list)):
+        return tuple(int(s) for s in spec)
+    shape = tuple(int(s) for s in str(spec).lower().split("x") if s)
+    if not shape or any(s < 1 for s in shape):
+        raise ValueError(f"bad mesh shape {spec!r}: want e.g. '4' or '2x2'")
+    return shape
+
+
+def make_apu_mesh(n_apus=1, axis: str = "apu"):
+    """Mesh of simulated APUs — the node topology of the multi-APU replay
+    (``repro.core.shard_program``).  Each "APU" is one forced
+    host-platform device; the Infinity Fabric between them is the
+    inter-device transfer path XLA partitions collectives onto.
+
+    ``n_apus`` is an APU count (1-D mesh, axis ``"apu"`` — the PR-3
+    surface) or a mesh shape (``(2, 2)`` / ``"2x2"``): an N-D
+    decomposition with axes ``("apu0", "apu1", ...)`` that cuts
+    surface-to-volume (docs/SCALING.md)."""
+    shape = parse_mesh_shape(n_apus)
+    axes = (axis,) if len(shape) == 1 else tuple(
+        f"{axis}{i}" for i in range(len(shape)))
+    n = 1
+    for s in shape:
+        n *= s
     devices = jax.devices()
-    if len(devices) < n_apus:
+    if len(devices) < n:
         raise RuntimeError(
-            f"need {n_apus} devices for a {n_apus}-APU mesh, have "
-            f"{len(devices)}; set XLA_FLAGS={apu_flags(n_apus)} before "
+            f"need {n} devices for a {shape} APU mesh, have "
+            f"{len(devices)}; set XLA_FLAGS={apu_flags(n)} before "
             "importing jax (see docs/SCALING.md)")
-    return jax.make_mesh((n_apus,), (axis,), devices=devices[:n_apus])
+    return jax.make_mesh(shape, axes, devices=devices[:n])

@@ -4,8 +4,18 @@ Runs the `fig_scaling` measurement for ONE simulated node size: capture a
 SIMPLE time-step, replay it on a single device and domain-decomposed
 across ``--apus`` simulated APUs (``repro.core.shard_program``), assert
 numerical parity (docs/DESIGN.md §2 tolerance), and report the node-level
-compute / staging / inter-APU-exchange split from the aggregated
-per-device ledgers.
+compute / staging / inter-APU-exchange / overlap split from the
+aggregated per-device ledgers.
+
+The exchange schedule is selectable (docs/SCALING.md): ``--schedule
+overlap`` (default) hides halo exchanges behind interior compute,
+``sequential`` is the exposed PR-3 baseline, ``split`` runs the causal
+interior/boundary sub-region split.  ``--halo-multiplier k`` exchanges
+``k``-wide ghosts every ``k``-th stencil application, and ``--mesh 2x2``
+decomposes over a 2-D mesh to cut surface-to-volume.  Grid extents that
+don't divide over the mesh are padded up to the next multiple
+(remainder-row padding — both replays run the padded grid, so parity
+stays meaningful).
 
 Each invocation must own its process: the APU count is baked into
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the first
@@ -13,8 +23,9 @@ jax import (the ``launch.dryrun`` trick), so the benchmark harness
 (``benchmarks/run.py fig_scaling``) runs this module once per node size in
 a subprocess:
 
-  PYTHONPATH=src python -m repro.launch.scaling --apus 4 --steps 2 \\
-      --grid 8,8,8 --policy unified --out artifacts/scaling/apu4.json
+  PYTHONPATH=src python -m repro.launch.scaling --apus 4 --mesh 2x2 \\
+      --steps 2 --grid 16,16,16 --policy unified \\
+      --out artifacts/scaling/apu4.json
 """
 from __future__ import annotations
 
@@ -29,19 +40,43 @@ def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--apus", type=int, default=2,
                     help="simulated APUs (forced host-platform devices)")
+    ap.add_argument("--mesh", default="",
+                    help="mesh shape over the APUs, e.g. '4' (1-D) or "
+                         "'2x2' (2-D, cuts surface-to-volume); default: "
+                         "1-D over --apus")
     ap.add_argument("--steps", type=int, default=2,
                     help="replayed time-steps per measurement")
     ap.add_argument("--grid", default="8,8,8",
-                    help="cavity grid; z must divide by --apus")
+                    help="cavity grid; extents that don't divide over the "
+                         "mesh are padded up to the next multiple")
     ap.add_argument("--policy", default="unified",
                     choices=("unified", "discrete", "host", "adaptive"))
     ap.add_argument("--variant", default="ref",
                     help="implementation variant both replays run under "
                          "(StaticSelector; regions without it fall back "
                          "to ref — docs/VARIANTS.md)")
+    ap.add_argument("--schedule", default="overlap",
+                    choices=("overlap", "sequential", "split"),
+                    help="halo-exchange schedule (docs/SCALING.md)")
+    ap.add_argument("--halo-multiplier", type=int, default=1,
+                    help="wide-halo ghost depth: exchange k-wide ghosts "
+                         "every k-th stencil application")
     ap.add_argument("--inner-max", type=int, default=6)
     ap.add_argument("--out", default="", help="also write the JSON here")
     return ap.parse_args(argv)
+
+
+def pad_grid(grid, mesh_shape, shard_dims=None):
+    """Remainder-row padding: grow each decomposed grid extent to the next
+    multiple of its mesh-axis size so every APU holds an equal chunk
+    (odd-sized production grids must not silently replicate).  Mesh axes
+    map to the trailing grid dimensions (the ShardExecutor default)."""
+    dims = shard_dims or range(-len(mesh_shape), 0)
+    grid = list(grid)
+    for dim, n in zip(dims, mesh_shape):
+        e = grid[dim]
+        grid[dim] = -(-e // n) * n
+    return tuple(grid)
 
 
 def main(argv=None) -> dict:
@@ -67,12 +102,17 @@ def main(argv=None) -> dict:
     from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
     from repro.core.regions import Executor, StaticSelector, make_policy
     from repro.core.shard_program import shard_program
-    from repro.launch.mesh import make_apu_mesh
+    from repro.launch.mesh import make_apu_mesh, parse_mesh_shape
 
-    grid = tuple(int(g) for g in args.grid.split(","))
-    if grid[-1] % args.apus:
-        raise SystemExit(f"grid z extent {grid[-1]} does not divide over "
-                         f"{args.apus} APUs")
+    mesh_shape = parse_mesh_shape(args.mesh) if args.mesh else (args.apus,)
+    n_mesh = 1
+    for s in mesh_shape:
+        n_mesh *= s
+    if n_mesh != args.apus:
+        raise SystemExit(f"mesh {mesh_shape} needs {n_mesh} APUs but "
+                         f"--apus={args.apus}")
+    grid_requested = tuple(int(g) for g in args.grid.split(","))
+    grid = pad_grid(grid_requested, mesh_shape)
     cfg = SimpleConfig(grid=Grid(grid), nu=0.1, inner_max=args.inner_max)
     app = SimpleFoam(cfg)
     st = init_state(cfg)
@@ -92,10 +132,13 @@ def main(argv=None) -> dict:
     s_ref, fom_ref = app.replay_steps(prog, st, args.steps, ref)
 
     # decomposed replay across the simulated node
-    mesh = make_apu_mesh(args.apus)
+    mesh = make_apu_mesh(mesh_shape)
     sh_policy = make_policy(args.policy)
     sh_policy.selector = selector
-    sp = shard_program(prog, mesh, sh_policy)
+    sp = shard_program(prog, mesh, sh_policy,
+                       halo_multiplier=args.halo_multiplier,
+                       overlap=args.schedule != "sequential",
+                       split_stencil=args.schedule == "split")
     app.replay_steps(prog, st, 1, sp)        # warm sharded compiles
     sp.reset_timings()
     s_sh, fom_sh = app.replay_steps(prog, st, args.steps, sp)
@@ -111,14 +154,22 @@ def main(argv=None) -> dict:
     rep = sp.coverage_report()
     rec = {
         "apus": args.apus,
+        "mesh_shape": list(mesh_shape),
         "grid": list(grid),
+        "grid_requested": list(grid_requested),
+        "grid_padded": grid != grid_requested,
         "steps": args.steps,
         "policy": args.policy,
         "variant": args.variant,
+        "schedule": args.schedule,
+        "halo_multiplier": args.halo_multiplier,
         "impl_counts": rep["impl_counts"],
         "ops": len(prog),
         "fom_single_s": fom_ref,
         "fom_sharded_s": fom_sh,
+        "exchange_fraction": rep["exchange_fraction"],
+        "exchange_s": rep["exchange_s"],
+        "overlap_s": rep["overlap_s"],
         "parity_max_abs_err": max_err,
         "parity_tol": tol,
         "parity_ok": bool(max_err <= tol),
