@@ -131,12 +131,20 @@ class HostStagingPool:
 
 
 class DeviceBufferPool:
-    """Free-lists of jax.Arrays keyed by (shape, dtype, memory_kind)."""
+    """Free-lists of jax.Arrays keyed by (shape, dtype, memory_kind).
 
-    def __init__(self, min_elems: int = POOL_MIN_ELEMS):
+    ``budget`` (a :class:`~repro.core.oversub.MemoryBudget`, duck-typed:
+    ``charge``/``release``) mirrors the pool's device-kind in-use bytes
+    into a logical device-capacity budget, so budget accounting and
+    ``PoolStats.bytes_in_use`` agree byte-for-byte for device-resident
+    buffers.  Host-kind buckets and sub-threshold (unpooled) buffers are
+    never charged — they don't occupy the device partition."""
+
+    def __init__(self, min_elems: int = POOL_MIN_ELEMS, budget=None):
         import jax
         self._jax = jax
         self.min_elems = min_elems
+        self.budget = budget
         self._free: Dict[tuple, list] = {}
         # async lookahead staging acquires from a prefetch thread while the
         # main thread releases — free-list mutation must be atomic
@@ -147,6 +155,13 @@ class DeviceBufferPool:
             self._default_kind = jax.devices()[0].default_memory().kind
         except Exception:                   # pragma: no cover
             self._default_kind = "device"
+
+    def _charges_budget(self, key) -> bool:
+        """Device-kind buckets count against the budget; explicit host
+        placements don't.  Mesh-sharded buckets (key[2] is a sharding
+        object) are device-resident by construction."""
+        return self.budget is not None and key[2] != "pinned_host" \
+            and key[2] != "unpinned_host"
 
     def _key(self, shape, dtype, memory_kind, sharding=None):
         # a mesh sharding IS the placement key: buffers split the same way
@@ -197,10 +212,14 @@ class DeviceBufferPool:
                 self.stats.bytes_reused += nbytes
                 self._free_bytes -= nbytes
                 self._account_acquire_locked(nbytes)
+                if self._charges_budget(key):
+                    self.budget.charge(nbytes)
                 return bucket.pop()
             self.stats.misses += 1
             self.stats.bytes_allocated += nbytes
             self._account_acquire_locked(nbytes)
+            if self._charges_budget(key):
+                self.budget.charge(nbytes)
         buf = jnp.zeros(shape, dtype)
         if sharding is not None:
             buf = self._jax.device_put(buf, sharding)
@@ -234,6 +253,8 @@ class DeviceBufferPool:
             # object itself — byte symmetry holds, so floor at zero only
             # defends against releases the pool never saw acquired
             self.stats.bytes_in_use = max(0, self.stats.bytes_in_use - nbytes)
+            if self._charges_budget(key):
+                self.budget.release(nbytes)
 
     @property
     def free_bytes(self) -> int:

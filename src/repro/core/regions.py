@@ -443,6 +443,37 @@ class NullStager:
 _copy_into = jax.jit(lambda src, dst: jnp.where(True, src, dst),
                      donate_argnums=(1,))
 
+# slab-into-donated-buffer: the chunked form of _copy_into for
+# budget-bounded staging — lands one leading-axis slab of the source in
+# the (donated) destination, so a leaf larger than the device budget's
+# staging granule streams through it in slabs instead of migrating as
+# one transient allocation.
+_copy_slab = jax.jit(
+    lambda dst, src, start: jax.lax.dynamic_update_slice_in_dim(
+        dst, src, start, axis=0),
+    donate_argnums=(0,))
+
+
+def _chunked_copy_into(h, dst, chunk_bytes: int):
+    """Stage host array ``h`` into the pooled device buffer ``dst`` in
+    leading-axis slabs of at most ``chunk_bytes`` — the managed-memory
+    page-migration model with the page size set by a
+    :class:`~repro.core.oversub.MemoryBudget`.  Values are identical to a
+    single ``_copy_into`` (same bytes, different copy granularity), which
+    is what keeps budgeted replay on the §2 parity contract.  Returns
+    ``(result, n_chunks)``."""
+    rows = int(h.shape[0]) if h.ndim else 0
+    row_bytes = h.nbytes // rows if rows else h.nbytes
+    slab = max(1, int(chunk_bytes) // max(int(row_bytes), 1))
+    if not rows or rows <= slab:
+        return _copy_into(h, dst), 1
+    y = dst
+    n = 0
+    for start in range(0, rows, slab):
+        y = _copy_slab(y, h[start:start + slab], start)
+        n += 1
+    return y, n
+
 
 @dataclasses.dataclass
 class MigrationStager:
@@ -455,12 +486,20 @@ class MigrationStager:
     churn").  Outbound, results are read back and landed in pooled host
     staging pages before being re-wrapped as host-space arrays, so the next
     host consumer sees host memory — and the next offloaded region pays the
-    migration again."""
+    migration again.
+
+    ``budget`` (a :class:`~repro.core.oversub.MemoryBudget`) bounds the
+    transient staging granule: leaves larger than the budget's
+    ``staging_chunk_bytes()`` migrate in leading-axis slabs through
+    ``_chunked_copy_into`` instead of one copy, so grids beyond device
+    capacity stream through the budget rather than blowing past it.
+    Chunking changes copy granularity, never values."""
     arena: UnifiedArena = dataclasses.field(default_factory=UnifiedArena)
     host_pool: HostStagingPool = dataclasses.field(
         default_factory=HostStagingPool)
     device_pool: DeviceBufferPool = dataclasses.field(
         default_factory=DeviceBufferPool)
+    budget: Optional[Any] = None
     stages = True
 
     def _migrate_in(self, x, rotation=None):
@@ -469,7 +508,13 @@ class MigrationStager:
         h = np.asarray(x)                               # host page read
         pool = rotation.pool if rotation is not None else self.device_pool
         dst = pool.acquire(h.shape, h.dtype)
-        y = _copy_into(h, dst)                          # host -> device copy
+        chunk = self.budget.staging_chunk_bytes() \
+            if self.budget is not None else None
+        if chunk is not None and h.nbytes > chunk:
+            y, n = _chunked_copy_into(h, dst, chunk)    # budgeted slabs
+            self.budget.note_chunks(n)
+        else:
+            y = _copy_into(h, dst)                      # host -> device copy
         if rotation is not None:
             # the copy DONATES dst; the bank must hold the result (which
             # owns the recycled storage), never the consumed buffer
@@ -565,9 +610,17 @@ class Placer:
 
     ``min_bytes`` is the paper-C4-style threshold: leaves smaller than it
     stay where they are (placing a scalar across spaces costs more than it
-    saves)."""
+    saves).
+
+    ``_place_tree`` is the single placement primitive every hint flows
+    through — subclasses override it to make placement *conditional*
+    (:class:`~repro.core.oversub.BudgetedPlacer` demotes device hints to
+    host space when a memory budget lacks headroom)."""
     min_bytes: int = 0
     honor_hints: bool = True
+
+    def _place_tree(self, tree, space: MemSpace):
+        return umem.tree_place(tree, space, min_bytes=self.min_bytes)
 
     def place_args(self, region: Region, args, kwargs):
         if not (self.honor_hints and region.arg_spaces):
@@ -577,14 +630,12 @@ class Placer:
         for key, space in region.arg_spaces.items():
             if isinstance(key, str):
                 if key in kwargs:
-                    kwargs[key] = umem.tree_place(kwargs[key], space,
-                                                  min_bytes=self.min_bytes)
+                    kwargs[key] = self._place_tree(kwargs[key], space)
                     continue
                 # name hint for a positionally-passed argument
                 key = region._param_index.get(key, -1)
             if isinstance(key, int) and 0 <= key < len(args):
-                args[key] = umem.tree_place(args[key], space,
-                                            min_bytes=self.min_bytes)
+                args[key] = self._place_tree(args[key], space)
         return tuple(args), kwargs
 
     def place_result(self, region: Region, out):
@@ -597,15 +648,13 @@ class Placer:
                 placed = list(out)
                 for key, space in rs.items():
                     if isinstance(key, int) and 0 <= key < len(placed):
-                        placed[key] = umem.tree_place(
-                            placed[key], space, min_bytes=self.min_bytes)
+                        placed[key] = self._place_tree(placed[key], space)
                 return tuple(placed)
             if isinstance(out, dict):
-                return {k: umem.tree_place(v, rs[k],
-                                           min_bytes=self.min_bytes)
+                return {k: self._place_tree(v, rs[k])
                         if k in rs else v for k, v in out.items()}
             return out
-        return umem.tree_place(out, rs, min_bytes=self.min_bytes)
+        return self._place_tree(out, rs)
 
 
 # ---------------------------------------------------------------------------
@@ -787,21 +836,32 @@ class HostPolicy(ComposedPolicy):
 
 class DiscretePolicy(ComposedPolicy):
     """Managed-memory dGPU model: offloaded regions run on the device and
-    pay real staging copies both ways (paper Fig 6)."""
+    pay real staging copies both ways (paper Fig 6).
+
+    ``budget`` (a :class:`~repro.core.oversub.MemoryBudget`) makes the
+    policy oversubscription-aware: the device pool charges its resident
+    bytes against it and the stager migrates in budget-sized slabs, so
+    grids beyond the logical device capacity stream through instead of
+    blowing past it."""
 
     def __init__(self, arena: Optional[UnifiedArena] = None,
                  host_pool: Optional[HostStagingPool] = None,
                  device_pool: Optional[DeviceBufferPool] = None,
                  placer: Optional[Placer] = None,
-                 selector: Optional[Selector] = None):
+                 selector: Optional[Selector] = None,
+                 budget: Optional[Any] = None):
         arena = arena or UnifiedArena()
+        if device_pool is None:
+            device_pool = DeviceBufferPool(budget=budget)
         super().__init__("discrete", StaticRouter("device", "default"),
                          MigrationStager(arena,
                                          host_pool or HostStagingPool(),
-                                         device_pool or DeviceBufferPool()),
+                                         device_pool,
+                                         budget=budget),
                          placer or Placer(),
                          selector or StaticSelector("ref"))
         self.arena = arena
+        self.budget = budget
 
 
 class AdaptivePolicy(ComposedPolicy):
@@ -812,10 +872,17 @@ class AdaptivePolicy(ComposedPolicy):
     def __init__(self, cutoff: int = DEFAULT_CUTOFF,
                  stager: Optional[Stager] = None,
                  placer: Optional[Placer] = None,
-                 selector: Optional[Selector] = None):
+                 selector: Optional[Selector] = None,
+                 budget: Optional[Any] = None):
+        if stager is None and budget is not None:
+            # oversubscription-aware adaptive: device-routed calls pay
+            # budget-chunked staging like the discrete model
+            stager = MigrationStager(
+                device_pool=DeviceBufferPool(budget=budget), budget=budget)
         super().__init__("adaptive", SizeRouter(cutoff),
                          stager or NullStager(), placer or Placer(),
                          selector or StaticSelector("ref"))
+        self.budget = budget
 
     @property
     def cutoff(self) -> int:

@@ -118,7 +118,8 @@ from repro.core.pool import DeviceBufferPool
 from repro.core.program import (Lit, Ref, RegionProgram, _is_array,
                                 _resolver, interval_overlap)
 from repro.core.regions import (ExecutionPolicy, Executor, Region,
-                                UnifiedPolicy, _copy_into, policy_selector)
+                                UnifiedPolicy, _chunked_copy_into,
+                                _copy_into, policy_selector)
 from repro.core.umem import replicated_sharding, shard_along_nd
 
 
@@ -251,6 +252,9 @@ class ShardExecutor:
         stager = self.policy.stager
         self._device_pool = getattr(stager, "device_pool", None) \
             or DeviceBufferPool()
+        # oversubscription: a budget-carrying stager bounds the scatter's
+        # transient staging granule (see regions._chunked_copy_into)
+        self._staging_budget = getattr(stager, "budget", None)
 
     @property
     def schedule(self) -> str:
@@ -343,7 +347,13 @@ class ShardExecutor:
             h = np.asarray(x)                       # host page read / gather
             sh = self.sharding_for(h)
             dst = self._device_pool.acquire(h.shape, h.dtype, sharding=sh)
-            y = _copy_into(h, dst)                  # host -> APUs scatter
+            chunk = self._staging_budget.staging_chunk_bytes() \
+                if self._staging_budget is not None else None
+            if chunk is not None and h.nbytes > chunk:
+                y, n = _chunked_copy_into(h, dst, chunk)  # budgeted slabs
+                self._staging_budget.note_chunks(n)
+            else:
+                y = _copy_into(h, dst)              # host -> APUs scatter
             if y.sharding != sh:                    # pragma: no cover
                 y = jax.device_put(y, sh)
             placed.append(y)

@@ -91,6 +91,32 @@ def tree_place(tree, space: MemSpace, device=None, min_bytes: int = 0):
     return jax.tree.map(maybe, tree)
 
 
+def tree_place_budgeted(tree, budget, device=None, min_bytes: int = 0,
+                        device_space: MemSpace = MemSpace.DEVICE,
+                        spill_space: Optional[MemSpace] = None,
+                        charge: bool = True):
+    """Place leaves into ``device_space`` while ``budget`` (a
+    :class:`~repro.core.oversub.MemoryBudget`, duck-typed ``admit``/
+    ``consult``) has headroom; leaves beyond it land in ``spill_space``
+    (the platform's preferred host DRAM space by default) instead of
+    failing — the oversubscription model: exceeding device capacity
+    degrades placement, never correctness.  ``charge=True`` accounts
+    admitted leaves as device-resident (``budget.admit``; the caller
+    releases them); ``charge=False`` only consults — the advisory form
+    used for per-call placement hints.  Leaf order is deterministic
+    (``jax.tree.map`` order), so the same tree under the same budget
+    always splits the same way."""
+    spill = spill_space or preferred_host_space(device) or device_space
+
+    def maybe(x):
+        nbytes = getattr(x, "nbytes", 0)
+        if min_bytes and nbytes < min_bytes:
+            return x
+        ok = budget.admit(nbytes) if charge else budget.consult(nbytes)
+        return place(x, device_space if ok else spill, device)
+    return jax.tree.map(maybe, tree)
+
+
 def place_like(tree, shardings):
     """device_put each leaf onto its matching sharding — the placement
     companion to :func:`tree_place` for sharded programs.  ``shardings``

@@ -341,9 +341,23 @@ def _engine_demo(cfg, mesh, params, ex, args, max_len):
                              run_traffic, solo_reference)
     from repro.serve.traffic import assert_parity
 
+    budget = None
+    if args.kv_oversub_ratio > 0:
+        # oversubscription mode: derive the logical device budget from the
+        # measured footprint of one parked full-length entry x slots, so
+        # --kv-oversub-ratio 2 means "the KV working set is 2x device
+        # capacity" regardless of model size (see docs/EXPERIMENTS.md)
+        from repro.core.oversub import MemoryBudget
+        probe = PagedKVCache(page_tokens=args.page_tokens)
+        probe.commit(0, T.init_cache(cfg, 1, max_len), true_len=max_len)
+        footprint = probe.total_bytes * args.slots
+        probe.free(0)
+        budget = MemoryBudget.for_ratio(footprint, args.kv_oversub_ratio,
+                                        name="kv")
     kv = PagedKVCache(page_tokens=args.page_tokens,
                       device_budget_bytes=args.kv_device_budget or None,
-                      total_budget_bytes=args.kv_total_budget or None)
+                      total_budget_bytes=args.kv_total_budget or None,
+                      budget=budget)
     engine = ServeEngine(cfg, mesh, params, ex, max_len=max_len,
                          n_slots=args.slots, kv=kv)
     lens = sorted({max(2, args.prompt_len // 2), args.prompt_len})
@@ -361,6 +375,11 @@ def _engine_demo(cfg, mesh, params, ex, args, max_len):
                   f" ({st.pages_fetched} fetched back)"
                   if st.pages_spilled else "")
     evict_note = f"; {st.evictions} evictions" if st.evictions else ""
+    if budget is not None:
+        evict_note += (f"; oversub x{args.kv_oversub_ratio:g} budget "
+                       f"{budget.limit_bytes} B (high-water "
+                       f"{budget.stats.high_water_bytes} B, "
+                       f"{budget.stats.pressure_events} pressure events)")
     print(f"[serve] engine {args.arch}"
           f"{' (reduced)' if args.reduced else ''} [{ex.mode}]: "
           f"{metrics['requests']} requests / {metrics['tokens']} tokens in "
@@ -417,6 +436,14 @@ def main(argv=None):
     ap.add_argument("--kv-total-budget", type=int, default=0, metavar="B",
                     help="engine paged-KV total budget in bytes; exceeding "
                          "it evicts+requeues LRU requests (0 = unlimited)")
+    ap.add_argument("--kv-oversub-ratio", type=float, default=0.0,
+                    metavar="R",
+                    help="engine KV oversubscription ratio: set the logical "
+                         "device budget (repro.core.oversub.MemoryBudget) "
+                         "to 1/R of the measured slots-x-full-length KV "
+                         "footprint, so R=2 runs a working set twice "
+                         "device capacity — LRU spill keeps it inside "
+                         "(0 = off)")
     ap.add_argument("--replay-batch", type=int, default=0, metavar="N",
                     help="also push N stacked request groups through the "
                          "captured decode program "

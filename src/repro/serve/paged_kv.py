@@ -107,7 +107,8 @@ class PagedKVCache:
                  pool: Optional[DeviceBufferPool] = None,
                  device_budget_bytes: Optional[int] = None,
                  total_budget_bytes: Optional[int] = None,
-                 host_space: Optional[MemSpace] = None):
+                 host_space: Optional[MemSpace] = None,
+                 budget=None):
         if page_tokens < 1:
             raise ValueError("page_tokens must be >= 1")
         self.page_tokens = page_tokens
@@ -117,9 +118,34 @@ class PagedKVCache:
         self.device_budget_bytes = device_budget_bytes
         self.total_budget_bytes = total_budget_bytes
         self.host_space = host_space or preferred_host_space()
+        # a MemoryBudget (repro.core.oversub) is the oversubscription form
+        # of device_budget_bytes: its limit caps device-resident page bytes
+        # (tightest of the two wins) and the store mirrors its device-byte
+        # deltas into it, so one budget instance can span the KV store and
+        # other device consumers.  Don't ALSO hand the same budget to
+        # self.pool — that would double-charge every page.
+        self.budget = budget
         self.stats = PagedKVStats()
         self._entries: Dict[int, _Entry] = {}
         self._clock = 0
+
+    def _device_limit(self) -> Optional[int]:
+        lims = [b for b in (self.device_budget_bytes,
+                            getattr(self.budget, "limit_bytes", None))
+                if b is not None]
+        return min(lims) if lims else None
+
+    def _device_delta(self, nbytes: int) -> None:
+        """Mirror a device-resident byte change into the attached budget
+        (charge on +, release on −); pressure events mark the window
+        between a commit landing over the limit and the LRU spill that
+        sheds it."""
+        if self.budget is None or nbytes == 0:
+            return
+        if nbytes > 0:
+            self.budget.charge(nbytes)
+        else:
+            self.budget.release(-nbytes)
 
     # -- bookkeeping ---------------------------------------------------
     def __len__(self) -> int:
@@ -209,6 +235,7 @@ class PagedKVCache:
                                        last_touch=self._clock)
         self.stats.pages_committed += n_pages
         self.stats.device_bytes += page_bytes
+        self._device_delta(page_bytes)
         self._water_marks()
         self._spill_to_budget()
         return self._evict_to_budget(newest=req_id)
@@ -228,12 +255,14 @@ class PagedKVCache:
         self.stats.pages_spilled += n
         self.stats.device_bytes -= e.page_bytes
         self.stats.host_bytes += e.page_bytes
+        self._device_delta(-e.page_bytes)
         self._water_marks()
 
     def _spill_to_budget(self) -> None:
-        if self.device_budget_bytes is None or self.host_space is None:
+        limit = self._device_limit()
+        if limit is None or self.host_space is None:
             return
-        while self.stats.device_bytes > self.device_budget_bytes:
+        while self.stats.device_bytes > limit:
             victim = self._lru(on_host=False)
             if victim is None:
                 break
@@ -263,6 +292,7 @@ class PagedKVCache:
             self.stats.host_bytes -= e.page_bytes
         else:
             self.stats.device_bytes -= e.page_bytes
+            self._device_delta(-e.page_bytes)
         out = []
         for rec in e.leaves:
             if rec[0] == "dense":
@@ -294,6 +324,7 @@ class PagedKVCache:
             self.stats.host_bytes -= e.page_bytes
         else:
             self.stats.device_bytes -= e.page_bytes
+            self._device_delta(-e.page_bytes)
         for rec in e.leaves:
             if rec[0] == "page":
                 for p in rec[1]:

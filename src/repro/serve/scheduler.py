@@ -336,3 +336,13 @@ class ServeEngine:
                         st.total_high_water_bytes)
         led.serve_gauge("kv_slot_cache_bytes", sum(
             int(x.nbytes) for x in jax.tree.leaves(self.slot_cache)))
+        budget = getattr(self.kv, "budget", None)
+        if budget is not None:
+            # oversubscription gauges: how hard the logical device budget
+            # was pressed and how much the LRU spill path had to shed
+            led.serve_gauge("kv_budget_limit_bytes",
+                            budget.limit_bytes or 0)
+            led.serve_gauge("kv_budget_high_water_bytes",
+                            budget.stats.high_water_bytes)
+            led.serve_gauge("kv_budget_pressure_events",
+                            budget.stats.pressure_events)

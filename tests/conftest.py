@@ -1,4 +1,5 @@
 import dataclasses
+import os
 import sys
 import types
 
@@ -65,6 +66,17 @@ except ImportError:
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def traffic_seed():
+    """ONE seed for every traffic-driven test (fig_traffic-style engine
+    runs): threading a single session fixture through makes the Poisson
+    request streams reproducible run-to-run instead of each module picking
+    its own ad-hoc constant.  Override with REPRO_TRAFFIC_SEED to sweep —
+    the parity oracles are derived from the same fixture, so any seed must
+    pass."""
+    return int(os.environ.get("REPRO_TRAFFIC_SEED", "11"))
 
 
 def fp32(cfg):

@@ -31,17 +31,20 @@ MAX_LEN = 16
 
 
 @pytest.fixture(scope="module")
-def setup():
+def setup(traffic_seed):
     cfg = make_reduced(get_config("tinyllama-1.1b"))
     mesh = make_smoke_mesh()
     params = T.init(jax.random.PRNGKey(0), cfg)
-    reqs = _traffic(cfg)
+    reqs = _traffic(cfg, traffic_seed)
     oracle, _ = solo_reference(cfg, mesh, params, reqs, MAX_LEN)
-    return {"cfg": cfg, "mesh": mesh, "params": params, "oracle": oracle}
+    return {"cfg": cfg, "mesh": mesh, "params": params, "oracle": oracle,
+            "seed": traffic_seed}
 
 
-def _traffic(cfg):
-    return make_traffic(seed=11, n_requests=4, vocab=cfg.vocab,
+def _traffic(cfg, seed):
+    # the seed comes from the session `traffic_seed` fixture (conftest.py)
+    # so every engine run and its parity oracle share one request stream
+    return make_traffic(seed=seed, n_requests=4, vocab=cfg.vocab,
                         arrival_rate=2.0, prompt_lens=(6, 10),
                         gen_lens=(1, 5))
 
@@ -146,7 +149,7 @@ def test_paged_kv_rejects_duplicate_commit(setup):
 # ---------------------------------------------------------------------------
 
 def test_engine_parity_unified(setup):
-    reqs = _traffic(setup["cfg"])
+    reqs = _traffic(setup["cfg"], setup["seed"])
     eng, ex, kv = _engine(setup)
     metrics = run_traffic(eng, reqs)
     assert_parity(reqs, setup["oracle"])
@@ -157,7 +160,7 @@ def test_engine_parity_unified(setup):
 def test_engine_parity_across_host_spill(setup):
     """Device page budget of 1 byte: every parked prefill crosses to host
     DRAM and back — oversubscription must not bend a single bit."""
-    reqs = _traffic(setup["cfg"])
+    reqs = _traffic(setup["cfg"], setup["seed"])
     eng, ex, kv = _engine(setup, ledger_name="spill",
                           device_budget_bytes=1)
     run_traffic(eng, reqs)
@@ -173,7 +176,7 @@ def test_engine_parity_across_eviction_requeue(setup):
     cfg = setup["cfg"]
     probe = PagedKVCache(page_tokens=4)
     probe.commit(0, _filled_cache(cfg), true_len=10)
-    reqs = _traffic(cfg)
+    reqs = _traffic(cfg, setup["seed"])
     eng, ex, kv = _engine(setup, ledger_name="evict",
                           total_budget_bytes=probe.total_bytes)
     run_traffic(eng, reqs)
@@ -185,7 +188,7 @@ def test_engine_parity_across_eviction_requeue(setup):
 def test_engine_parity_discrete_policy(setup):
     """The engine is policy-agnostic: under the discrete emulation every
     region stages through the pools, tokens still match solo jit."""
-    reqs = _traffic(setup["cfg"])
+    reqs = _traffic(setup["cfg"], setup["seed"])
     pol = lm_policy("discrete", setup["cfg"].memory)
     eng, ex, kv = _engine(setup, policy=pol, ledger_name="discrete")
     run_traffic(eng, reqs)
@@ -197,7 +200,7 @@ def test_engine_parity_discrete_policy(setup):
 def test_engine_parity_offload_kv_placer(setup):
     """--offload-kv composes: the KVCachePlacer re-homes appended pages at
     region boundaries while the paged store parks prefills — same bits."""
-    reqs = _traffic(setup["cfg"])
+    reqs = _traffic(setup["cfg"], setup["seed"])
     pol = lm_policy("unified", setup["cfg"].memory,
                     placer=SV.offload_kv_cache(min_bytes=0))
     eng, ex, kv = _engine(setup, policy=pol, ledger_name="offkv")
@@ -210,7 +213,7 @@ def test_engine_parity_offload_kv_placer(setup):
 # ---------------------------------------------------------------------------
 
 def test_engine_serve_section_accounts_lifecycle(setup):
-    reqs = _traffic(setup["cfg"])
+    reqs = _traffic(setup["cfg"], setup["seed"])
     eng, ex, kv = _engine(setup, ledger_name="acct")
     run_traffic(eng, reqs)
     rep = ex.ledger.coverage_report()
