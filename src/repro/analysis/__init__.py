@@ -1,0 +1,27 @@
+"""Static verification of captured region programs (docs/ANALYSIS.md).
+
+A captured :class:`~repro.core.program.RegionProgram` is a frozen
+dataflow graph carrying every ``Region``'s declarations — which makes
+the unified-memory failure modes (donation races, under-declared halos,
+placement churn, budget blowups) statically checkable before a single
+replay:
+
+>>> prog = capture(step, *example_inputs, verify=UnifiedPolicy())
+>>> prog.verify(DiscretePolicy()).summary()
+'cavity under discrete: 0 errors, 2 warnings across 9 ops'
+
+Entry points: :func:`verify_program` (full rule set),
+:func:`check_halo` (halo rule only — the ``ShardExecutor`` pre-flight),
+``RegionProgram.verify`` / ``capture(..., verify=)``, the serve/train
+``--verify`` flags, and the ``python -m repro.analysis`` CLI that lints
+the whole in-repo corpus into ``artifacts/analysis/report.json``.
+"""
+from repro.analysis.report import (ERROR, INFO, WARNING, AnalysisReport,
+                                   Diagnostic, ProgramVerificationError)
+from repro.analysis.rules import RULES, check_halo, verify_program
+
+__all__ = [
+    "ERROR", "INFO", "WARNING",
+    "AnalysisReport", "Diagnostic", "ProgramVerificationError",
+    "RULES", "check_halo", "verify_program",
+]

@@ -1,0 +1,103 @@
+"""CLI: lint every in-repo captured program under every policy.
+
+    PYTHONPATH=src python -m repro.analysis --all \
+        --out artifacts/analysis/report.json
+
+Captures the corpus (CFD SIMPLE step, serve prefill/decode, engine
+tick, train step) at smoke scale, runs the full rule set under each of
+the unified / discrete / adaptive policies, writes one JSON report, and
+exits non-zero when any finding is error-severity — the CI gate.
+``--costs`` additionally prices each program on the dormant
+hloparse/dryrun cost model (per-op FLOPs, HBM bytes, roofline seconds).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.analysis import verify_program
+from repro.analysis.programs import PROGRAM_NAMES, build_programs
+from repro.core.ledger import Ledger
+
+POLICY_NAMES = ("unified", "discrete", "adaptive")
+
+
+def _make_policy(name: str):
+    from repro.core.regions import (AdaptivePolicy, DiscretePolicy,
+                                    UnifiedPolicy)
+    return {"unified": UnifiedPolicy, "discrete": DiscretePolicy,
+            "adaptive": AdaptivePolicy}[name]()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="statically verify the in-repo captured programs")
+    ap.add_argument("--all", action="store_true",
+                    help="lint the full corpus (default when --programs "
+                         "is not given)")
+    ap.add_argument("--programs", default=None,
+                    help=f"comma-separated subset of {PROGRAM_NAMES}")
+    ap.add_argument("--policies", default=",".join(POLICY_NAMES),
+                    help="comma-separated policies to lint under "
+                         f"(default: {','.join(POLICY_NAMES)})")
+    ap.add_argument("--out", default="artifacts/analysis/report.json",
+                    help="JSON report path")
+    ap.add_argument("--costs", action="store_true",
+                    help="include hloparse/dryrun per-op cost estimates")
+    args = ap.parse_args(argv)
+
+    names = None if args.all or args.programs is None \
+        else [s for s in args.programs.split(",") if s]
+    policies = [s for s in args.policies.split(",") if s]
+    ledger = Ledger("analysis_cli")
+
+    t0 = time.time()
+    programs = build_programs(names)
+    entries, n_errors, n_warnings = [], 0, 0
+    for name, prog in programs:
+        for pol_name in policies:
+            rep = verify_program(prog, _make_policy(pol_name),
+                                 ledger=ledger)
+            rep_d = rep.as_dict()
+            rep_d["corpus_name"] = name
+            entries.append(rep_d)
+            n_errors += len(rep.errors)
+            n_warnings += len(rep.warnings)
+            print(f"[analysis] {name:>14s} under {pol_name:>8s}: "
+                  f"{len(rep.errors)} errors, {len(rep.warnings)} warnings "
+                  f"({rep.n_ops} ops)")
+            for d in rep.findings:
+                print(f"    {d}")
+        if args.costs:
+            from repro.analysis.costs import estimate_program_costs
+            costs = estimate_program_costs(prog)
+            entries.append({"corpus_name": name, "costs": costs})
+            print(f"[analysis] {name:>14s} costs: "
+                  f"{costs['flops']:.3g} flops, "
+                  f"{costs['hbm_bytes']:.3g} HBM bytes "
+                  f"({len(costs['skipped'])} ops skipped)")
+
+    report = {
+        "generated_unix": t0,
+        "programs": [n for n, _ in programs],
+        "policies": policies,
+        "n_errors": n_errors,
+        "n_warnings": n_warnings,
+        "analysis_counters": dict(ledger.analysis_counters),
+        "reports": entries,
+    }
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2, default=str))
+    print(f"[analysis] wrote {out} "
+          f"({n_errors} errors, {n_warnings} warnings, "
+          f"{time.time() - t0:.1f}s)")
+    return 1 if n_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

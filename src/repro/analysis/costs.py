@@ -1,0 +1,109 @@
+"""Optional per-op bytes/FLOPs estimator: the dormant cost model, wired.
+
+``launch/hloparse.py`` (HLO text -> FLOPs / HBM bytes / collectives) and
+``launch/dryrun.py`` (MI300A roofline constants) have been idle since
+the seed; the verifier is their first consumer on the road to the
+ROADMAP item-5 policy autotuner.  For each captured op we rebuild the
+call abstractly — ``jax.ShapeDtypeStruct`` leaves from the trace's
+example inputs, ``Lit`` constants, and producer ``out_meta`` — lower
+the region's ref function, and hand the compiled HLO to
+``hloparse.analyze``; the roofline constants turn the counts into
+compute/memory seconds and a bound-side verdict.
+
+``dryrun`` mutates ``XLA_FLAGS`` at import (its forced-host device
+fan-out), so it is imported lazily here with the previous value saved
+and restored — estimating costs must never reconfigure the session's
+backend.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.program import In, Lit, OpCall, Ref, RegionProgram, _is_array
+from repro.launch import hloparse
+
+
+def _roofline_constants():
+    """(PEAK_FLOPS, HBM_BW) from ``launch.dryrun`` without letting its
+    import-time ``XLA_FLAGS`` override leak into this process's env."""
+    prev = os.environ.get("XLA_FLAGS")
+    try:
+        from repro.launch import dryrun
+    finally:
+        if prev is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = prev
+    return float(dryrun.PEAK_FLOPS), float(dryrun.HBM_BW)
+
+
+def _abstract_leaf(prog: RegionProgram, d) -> Any:
+    """The leaf as lowering input: ShapeDtypeStruct for arrays (shape and
+    dtype from the trace), the literal value otherwise."""
+    if isinstance(d, In):
+        x = prog._example_in_leaves[d.slot]
+        return jax.ShapeDtypeStruct(x.shape, x.dtype) if _is_array(x) else x
+    if isinstance(d, Lit):
+        v = d.value
+        return jax.ShapeDtypeStruct(v.shape, v.dtype) if _is_array(v) else v
+    meta = getattr(prog.ops[d.op], "out_meta", None)
+    if not meta or d.leaf >= len(meta) or meta[d.leaf] is None:
+        raise ValueError(
+            f"op{d.op} of {prog.name!r} carries no out_meta for leaf "
+            f"{d.leaf}; re-capture the program to record output shapes")
+    shape, dtype, _ = meta[d.leaf]
+    return jax.ShapeDtypeStruct(tuple(shape), np.dtype(dtype))
+
+
+def estimate_op_costs(prog: RegionProgram, op_index: int) -> Dict[str, Any]:
+    """Static cost estimate for one captured op: lower the region's ref
+    function on abstract operands, parse the compiled HLO, price it on
+    the MI300A roofline."""
+    op: OpCall = prog.ops[op_index]
+    leaves = [_abstract_leaf(prog, d) for d in op.leaves]
+    args, kwargs = jax.tree.unflatten(op.in_tree, leaves)
+    hlo = jax.jit(op.region.fn).lower(*args, **kwargs).compile().as_text()
+    costs = hloparse.analyze(hlo)
+    peak_flops, hbm_bw = _roofline_constants()
+    compute_s = costs.flops / peak_flops
+    memory_s = costs.hbm_bytes / hbm_bw
+    return {
+        "op": op_index,
+        "region": op.region.name,
+        "flops": costs.flops,
+        "hbm_bytes": costs.hbm_bytes,
+        "collectives": dict(costs.collectives),
+        "roofline_compute_s": compute_s,
+        "roofline_memory_s": memory_s,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+    }
+
+
+def estimate_program_costs(prog: RegionProgram,
+                           strict: bool = False) -> Dict[str, Any]:
+    """Per-op estimates plus program totals.  Ops whose regions fail to
+    lower abstractly (data-dependent host code) are skipped with their
+    error recorded unless ``strict``."""
+    ops: List[Dict[str, Any]] = []
+    skipped: List[Dict[str, Any]] = []
+    for i in range(len(prog.ops)):
+        try:
+            ops.append(estimate_op_costs(prog, i))
+        except Exception as exc:                 # noqa: BLE001 - reported
+            if strict:
+                raise
+            skipped.append({"op": i, "region": prog.ops[i].region.name,
+                            "error": str(exc)})
+    return {
+        "program": prog.name,
+        "flops": sum(o["flops"] for o in ops),
+        "hbm_bytes": sum(o["hbm_bytes"] for o in ops),
+        "roofline_compute_s": sum(o["roofline_compute_s"] for o in ops),
+        "roofline_memory_s": sum(o["roofline_memory_s"] for o in ops),
+        "ops": ops,
+        "skipped": skipped,
+    }

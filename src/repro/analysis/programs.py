@@ -1,0 +1,144 @@
+"""The in-repo program corpus the verifier lints.
+
+Every captured program the repo ships — the CFD SIMPLE step, the serve
+PREFILL / DECODE_STEP / KV_APPEND programs, the engine's vmapped
+DECODE_SLOTS tick, and the train FWD_BWD + ADAMW_UPDATE step — built at
+smoke scale, once per process (capture is the expensive part; a static
+lint against any policy is free afterwards).  Shared by the
+``python -m repro.analysis`` CLI and ``tests/test_analysis.py`` so the
+CI gate and the test suite lint the exact same corpus.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Tuple
+
+from repro.core.ledger import Ledger
+from repro.core.program import RegionProgram
+
+#: corpus program names, in build order
+PROGRAM_NAMES = ("simple_step", "serve_prefill", "serve_decode",
+                 "engine_tick", "train_step")
+
+# serve smoke shape (mirrors tests/test_serve_train_regions.py)
+BATCH, PROMPT, GEN = 2, 8, 4
+MAX_LEN = PROMPT + GEN
+
+
+@functools.lru_cache(maxsize=None)
+def build_simple_step() -> RegionProgram:
+    """The captured CFD SIMPLE step on a smoke grid (stencil-heavy:
+    momentum/pressure assembly, DILU chains, grad(p))."""
+    from repro.cfd.grid import Grid
+    from repro.cfd.simple import SimpleConfig, SimpleFoam, init_state
+    cfg = SimpleConfig(grid=Grid((8, 8, 8)), nu=0.1, inner_max=5)
+    app = SimpleFoam(cfg)
+    st = init_state(cfg)
+    return app.capture_step(st)
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_programs() -> Tuple[RegionProgram, RegionProgram]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.reduced import reduced as make_reduced
+    from repro.configs.registry import get_config
+    from repro.core.regions import Executor, UnifiedPolicy
+    from repro.launch import serve as SV
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import transformer as T
+
+    cfg = make_reduced(get_config("tinyllama-1.1b"))
+    mesh = make_smoke_mesh()
+    key = jax.random.PRNGKey(0)
+    params = T.init(key, cfg)
+    prompts = jax.random.randint(key, (BATCH, PROMPT), 0, cfg.vocab,
+                                 jnp.int32)
+    batch_in = {"tokens": prompts}
+    regions = SV.make_serve_regions(cfg, mesh, params,
+                                    ledger=Ledger("analysis_serve"))
+    prefill_prog = SV.capture_prefill_program(
+        regions, batch_in, T.init_cache(cfg, BATCH, MAX_LEN))
+    ex = Executor(UnifiedPolicy(), Ledger("analysis_serve_replay"))
+    tok, cache = prefill_prog.replay(ex, batch_in,
+                                     T.init_cache(cfg, BATCH, MAX_LEN))
+    decode_prog = SV.capture_decode_program(regions, PROMPT, GEN, tok, cache)
+    return prefill_prog, decode_prog
+
+
+def build_serve_prefill() -> RegionProgram:
+    """PREFILL + donated KV_APPEND cache commit."""
+    return _serve_programs()[0]
+
+
+def build_serve_decode() -> RegionProgram:
+    """(gen-1) x (DECODE_STEP + donated KV_APPEND)."""
+    return _serve_programs()[1]
+
+
+@functools.lru_cache(maxsize=None)
+def build_engine_tick() -> RegionProgram:
+    """The continuous-batching engine's captured vmapped DECODE_SLOTS
+    tick (live position/active-mask inputs, donated slot-cache commit)."""
+    import jax
+
+    from repro.configs.reduced import reduced as make_reduced
+    from repro.configs.registry import get_config
+    from repro.core.regions import Executor, UnifiedPolicy
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import transformer as T
+    from repro.serve import PagedKVCache, ServeEngine
+
+    cfg = make_reduced(get_config("tinyllama-1.1b"))
+    mesh = make_smoke_mesh()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    ex = Executor(UnifiedPolicy(), Ledger("analysis_engine"))
+    eng = ServeEngine(cfg, mesh, params, ex, max_len=MAX_LEN, n_slots=2,
+                      kv=PagedKVCache(page_tokens=4))
+    return eng.tick_prog
+
+
+@functools.lru_cache(maxsize=None)
+def build_train_step() -> RegionProgram:
+    """The captured FWD_BWD + ADAMW_UPDATE training step."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.reduced import reduced as make_reduced
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.optim import adamw
+    from repro.train import step as S
+
+    cfg = make_reduced(get_config("tinyllama-1.1b"))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3)
+    key = jax.random.PRNGKey(1)
+    params = T.init(key, cfg)
+    opt = adamw.init_state(params, opt_cfg)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab,
+                                          jnp.int32)}
+    regions = S.make_train_regions(cfg, opt_cfg,
+                                   ledger=Ledger("analysis_train"))
+    return S.capture_train_program(regions, (params, opt), batch)
+
+
+_BUILDERS: Dict[str, Callable[[], RegionProgram]] = {
+    "simple_step": build_simple_step,
+    "serve_prefill": build_serve_prefill,
+    "serve_decode": build_serve_decode,
+    "engine_tick": build_engine_tick,
+    "train_step": build_train_step,
+}
+
+
+def build_programs(names=None) -> List[Tuple[str, RegionProgram]]:
+    """Build (and cache) the named corpus programs; ``None`` = all."""
+    picked = PROGRAM_NAMES if names is None else tuple(names)
+    out = []
+    for name in picked:
+        if name not in _BUILDERS:
+            raise KeyError(f"unknown corpus program {name!r}; "
+                           f"available: {PROGRAM_NAMES}")
+        out.append((name, _BUILDERS[name]()))
+    return out

@@ -1,0 +1,121 @@
+"""Structured diagnostics for the static program verifier.
+
+A verification pass walks one captured
+:class:`~repro.core.program.RegionProgram` and emits
+:class:`Diagnostic` findings — each carries the rule id, a severity, the
+(program, op, region, argument) location, a human message, and a fix
+hint.  :class:`AnalysisReport` is the per-(program, policy) bundle the
+callers consume: ``capture(..., verify=)`` and the serve/train
+``--verify`` flags raise on ``.errors``, the ``python -m repro.analysis``
+CLI serializes ``.as_dict()`` into ``artifacts/analysis/report.json``,
+and ``ShardExecutor`` gates decomposition on error-severity halo
+findings only (see docs/ANALYSIS.md for the severity policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+#: severity levels, most severe first.  ``error`` findings are
+#: statically provable correctness violations (replay or sharded
+#: exchange WILL misbehave); ``warning`` findings are hazards or wasted
+#: bytes/bandwidth the program still survives; ``info`` is advisory.
+ERROR = "error"
+WARNING = "warning"
+INFO = "info"
+
+_SEVERITY_ORDER = {ERROR: 0, WARNING: 1, INFO: 2}
+
+
+@dataclasses.dataclass
+class Diagnostic:
+    """One finding of one rule at one program location."""
+    rule: str                       # rule id, e.g. "donate-after-use"
+    severity: str                   # ERROR | WARNING | INFO
+    program: str                    # RegionProgram.name
+    message: str
+    hint: str = ""                  # how to fix it
+    op: Optional[int] = None        # op index in the trace, if op-level
+    region: Optional[str] = None    # Region.name at that op
+    arg: Any = None                 # top-level arg index / kwarg name
+
+    def location(self) -> str:
+        loc = self.program
+        if self.op is not None:
+            loc += f":op{self.op}"
+        if self.region is not None:
+            loc += f"({self.region})"
+        if self.arg is not None:
+            loc += f" arg {self.arg!r}"
+        return loc
+
+    def __str__(self) -> str:
+        s = f"{self.severity}[{self.rule}] {self.location()}: {self.message}"
+        if self.hint:
+            s += f" (fix: {self.hint})"
+        return s
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    """All findings of one verification pass over one program."""
+    program: str
+    policy: Optional[str] = None            # policy name the pass assumed
+    findings: List[Diagnostic] = dataclasses.field(default_factory=list)
+    n_ops: int = 0
+
+    def __post_init__(self):
+        self.findings.sort(
+            key=lambda d: (_SEVERITY_ORDER.get(d.severity, 9),
+                           d.op if d.op is not None else -1, d.rule))
+
+    @property
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.findings if d.severity == ERROR]
+
+    @property
+    def warnings(self) -> List[Diagnostic]:
+        return [d for d in self.findings if d.severity == WARNING]
+
+    @property
+    def ok(self) -> bool:
+        """Clean at error severity (warnings don't block replay)."""
+        return not self.errors
+
+    def by_rule(self) -> dict:
+        out: dict = {}
+        for d in self.findings:
+            out.setdefault(d.rule, []).append(d)
+        return out
+
+    def summary(self) -> str:
+        pol = f" under {self.policy}" if self.policy else ""
+        return (f"{self.program}{pol}: {len(self.errors)} errors, "
+                f"{len(self.warnings)} warnings across {self.n_ops} ops")
+
+    def as_dict(self) -> dict:
+        return {
+            "program": self.program,
+            "policy": self.policy,
+            "n_ops": self.n_ops,
+            "n_errors": len(self.errors),
+            "n_warnings": len(self.warnings),
+            "findings": [d.as_dict() for d in self.findings],
+        }
+
+    def raise_if_errors(self) -> "AnalysisReport":
+        if self.errors:
+            raise ProgramVerificationError(self)
+        return self
+
+
+class ProgramVerificationError(ValueError):
+    """Raised when a verification pass finds error-severity defects."""
+
+    def __init__(self, report: AnalysisReport):
+        self.report = report
+        lines = [report.summary()] + [f"  {d}" for d in report.errors]
+        super().__init__("\n".join(lines))

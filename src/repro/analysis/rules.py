@@ -1,0 +1,555 @@
+"""The rule set of the static program verifier.
+
+Every rule walks a captured :class:`~repro.core.program.RegionProgram`'s
+``OpCall`` graph (``Ref``/``In``/``Lit`` edges) together with each
+:class:`~repro.core.regions.Region`'s declarations — ``donate_args``,
+``result_space``/``arg_spaces``, ``stencil``/``halo_args``, registered
+variants — under one concrete ``ExecutionPolicy``, and yields
+:class:`~repro.analysis.report.Diagnostic` findings.  The graph is
+frozen and the declarations are data, so this entire bug class (the
+PR-4 donation race, under-declared halos, placement ping-pong, budget
+blowups) is catchable *before a single replay*.
+
+Severity policy (docs/ANALYSIS.md): ``error`` = replay or sharded
+exchange is statically provably wrong (deleted buffers read, halo
+operands silently skipped, variants that cannot bind the captured
+call); ``warning`` = a hazard or wasted bytes the program survives
+(dead results, host<->device churn, pooled donation, composed stencil
+reach, watermark over budget).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+import jax
+
+from repro.analysis.report import (ERROR, INFO, WARNING, AnalysisReport,
+                                   Diagnostic)
+from repro.core.program import In, Lit, OpCall, Ref, RegionProgram, _is_array, \
+    _leaf_space
+from repro.core.regions import Region
+
+#: every rule id, in the order the verifier runs them
+RULES = (
+    "donate-after-use",
+    "donate-pooled",
+    "dead-result",
+    "placement-churn",
+    "halo-under-declaration",
+    "variant-contract",
+    "budget-infeasibility",
+)
+
+
+def _host_kind(space) -> bool:
+    return getattr(space, "kind", None) in ("pinned_host", "unpinned_host")
+
+
+def _device_kind(space) -> bool:
+    return getattr(space, "kind", None) == "device"
+
+
+def _leaf_nbytes(prog: RegionProgram, d) -> int:
+    """Static byte size of the value a leaf descriptor stands for."""
+    if isinstance(d, In):
+        x = prog._example_in_leaves[d.slot]
+        return int(getattr(x, "nbytes", 0) or 0)
+    if isinstance(d, Lit):
+        v = d.value
+        return int(getattr(v, "nbytes", 0) or 0) if _is_array(v) else 0
+    if isinstance(d, Ref):
+        meta = getattr(prog.ops[d.op], "out_meta", None)
+        if meta and d.leaf < len(meta) and meta[d.leaf] is not None:
+            return int(meta[d.leaf][2])
+    return 0
+
+
+def _out_nbytes(op: OpCall) -> int:
+    meta = getattr(op, "out_meta", None)
+    if not meta:
+        return 0
+    return sum(int(m[2]) for m in meta if m is not None)
+
+
+def _desc_key(d):
+    """Hashable identity of a leaf descriptor (Lits by object identity)."""
+    if isinstance(d, Ref):
+        return ("ref", d.op, d.leaf)
+    if isinstance(d, In):
+        return ("in", d.slot)
+    return ("lit", id(d))
+
+
+def _halo_leaf_positions(op: OpCall) -> Set[int]:
+    """Leaf indices the sharded halo exchange would migrate for this op —
+    mirrors ``ShardExecutor._halo_leaf_indices`` (``halo_args=None``
+    means every leaf)."""
+    spec = op.region.halo_args
+    if spec is None:
+        return set(range(len(op.leaves)))
+    keys: Set[Any] = set()
+    for entry in spec:
+        keys.add(entry)
+        if isinstance(entry, str):
+            idx = op.region._param_index.get(entry)
+            if idx is not None:
+                keys.add(idx)
+    return {j for j, k in enumerate(op.arg_keys) if k in keys}
+
+
+def _out_leaf_spaces(op: OpCall) -> Dict[int, Any]:
+    """Per-output-leaf MemSpace implied by the region's ``result_space``
+    (whole-result space, or a {tuple index / dict key: space} mapping
+    resolved through the captured ``out_tree``)."""
+    rs = op.region.result_space
+    if rs is None or op.out_tree is None:
+        return {}
+    if not hasattr(rs, "items"):                      # one space for all
+        return {j: rs for j in range(op.n_out)}
+    tree = jax.tree.unflatten(op.out_tree, list(range(op.n_out)))
+    spaces: Dict[int, Any] = {}
+    if isinstance(tree, tuple):
+        for key, space in rs.items():
+            if isinstance(key, int) and 0 <= key < len(tree):
+                for leaf in jax.tree.leaves(tree[key]):
+                    spaces[leaf] = space
+    elif isinstance(tree, dict):
+        for key, space in rs.items():
+            if key in tree:
+                for leaf in jax.tree.leaves(tree[key]):
+                    spaces[leaf] = space
+    return spaces
+
+
+# ---------------------------------------------------------------------------
+# Rules.  Each takes (prog, policy) and yields Diagnostics.
+# ---------------------------------------------------------------------------
+
+def _rule_donate_after_use(prog: RegionProgram, policy) -> Iterator[Diagnostic]:
+    """A leaf donated by op *i* (``Region.donate_args``) must be DEAD
+    after op *i*: XLA may alias the output onto its storage, so any later
+    ``Ref``, a second use inside the same call, or returning it from the
+    program reads a deleted buffer on replay — the PR-4 race class."""
+    for i, op in enumerate(prog.ops):
+        donated = {k for k in (op.region.donate_args or ())
+                   if isinstance(k, int)}
+        if not donated:
+            continue
+        for j, d in enumerate(op.leaves):
+            if op.arg_keys[j] not in donated:
+                continue
+            where = dict(op=i, region=op.region.name, arg=op.arg_keys[j])
+            if isinstance(d, Lit):
+                if _is_array(d.value):
+                    yield Diagnostic(
+                        "donate-after-use", ERROR, prog.name,
+                        "donates a captured trace constant; the first "
+                        "donating replay deletes it and every later replay "
+                        "reads a dead buffer",
+                        hint="produce the value inside a region (so replays "
+                             "recompute it) or drop it from donate_args",
+                        **where)
+                continue
+            if not isinstance(d, (Ref, In)):
+                continue
+            dup = any(j2 != j and d2 == d
+                      for j2, d2 in enumerate(op.leaves))
+            later = next(
+                ((k, j2) for k in range(i + 1, len(prog.ops))
+                 for j2, d2 in enumerate(prog.ops[k].leaves) if d2 == d),
+                None)
+            returned = any(d2 == d for d2 in prog.out_leaves)
+            src = (f"input slot {d.slot}" if isinstance(d, In)
+                   else f"op{d.op} output {d.leaf}")
+            if later is not None:
+                k, j2 = later
+                yield Diagnostic(
+                    "donate-after-use", ERROR, prog.name,
+                    f"donates {src}, but op{k} "
+                    f"({prog.ops[k].region.name}) still reads it at leaf "
+                    f"{j2} — donation deletes the buffer before that use",
+                    hint="donate only the LAST consumer of a value, or "
+                         "drop the argument from donate_args",
+                    **where)
+            elif returned:
+                yield Diagnostic(
+                    "donate-after-use", ERROR, prog.name,
+                    f"donates {src}, which is also a program output — "
+                    "replay would return a deleted buffer",
+                    hint="return the op's result instead of its donated "
+                         "operand, or drop the argument from donate_args",
+                    **where)
+            elif dup:
+                yield Diagnostic(
+                    "donate-after-use", ERROR, prog.name,
+                    f"donates {src}, which the same call also passes at "
+                    "another argument — XLA would alias a live operand",
+                    hint="pass a distinct value or drop the argument from "
+                         "donate_args",
+                    **where)
+
+
+def _rule_donate_pooled(prog: RegionProgram, policy) -> Iterator[Diagnostic]:
+    """Donation under a staging policy: executors fall back to
+    ``executable(donate=False)``, but direct ``Region.__call__`` /
+    ``as_fn`` paths still donate — and staged operands may alias
+    ``DeviceBufferPool`` pages whose lifetime the stager owns."""
+    stager = getattr(policy, "stager", None)
+    if not getattr(stager, "stages", False):
+        return
+    for i, op in enumerate(prog.ops):
+        r = op.region
+        if not r.donate_args:
+            continue
+        tgt = policy.router.target(r, (), {}, size=op.example_size)
+        if r.offloaded and tgt != "host":
+            yield Diagnostic(
+                "donate-pooled", WARNING, prog.name,
+                f"declares donate_args={tuple(r.donate_args)} but stages "
+                f"under policy {getattr(policy, 'name', '?')!r}; donation "
+                "would hand pool-owned staged pages to XLA on any "
+                "non-executor call path",
+                hint="mark the region offloaded=False, avoid donate_args "
+                     "on staged regions, or replay only through executors "
+                     "(which compile donate=False when staging)",
+                op=i, region=r.name)
+
+
+def _rule_dead_result(prog: RegionProgram, policy) -> Iterator[Diagnostic]:
+    """An op whose output leaves are never Ref'd by a later op nor
+    returned did real device work for nothing on every replay (its value
+    was frozen into a ``Lit`` at capture if it steered control flow)."""
+    used: Set[Tuple[int, int]] = set()
+    for op in prog.ops:
+        for d in op.leaves:
+            if isinstance(d, Ref):
+                used.add((d.op, d.leaf))
+    for d in prog.out_leaves:
+        if isinstance(d, Ref):
+            used.add((d.op, d.leaf))
+    for i, op in enumerate(prog.ops):
+        if op.n_out and not any((i, j) in used for j in range(op.n_out)):
+            yield Diagnostic(
+                "dead-result", WARNING, prog.name,
+                "no output leaf is consumed by a later op or returned; "
+                "the call recomputes a value every replay that only "
+                "existed as a frozen capture-time constant (or not at all)",
+                hint="drop the call from the captured step, or feed its "
+                     "result to a region instead of host-extracting it",
+                op=i, region=op.region.name)
+
+
+def _rule_placement_churn(prog: RegionProgram, policy) -> Iterator[Diagnostic]:
+    """A dataflow edge whose producer pins its result host-side while the
+    consumer pins the same leaf device-side (or vice versa) migrates the
+    bytes twice per replay — the round-trip the MI300A studies price."""
+    placer = getattr(policy, "placer", None)
+    if placer is not None and not getattr(placer, "honor_hints", True):
+        return
+    seen: Set[Tuple[str, str, Any]] = set()
+    for ci, cop in enumerate(prog.ops):
+        for j, d in enumerate(cop.leaves):
+            if not isinstance(d, Ref):
+                continue
+            pop = prog.ops[d.op]
+            pspace = _out_leaf_spaces(pop).get(d.leaf)
+            cspace = _leaf_space(cop.region, cop.arg_keys[j])
+            if pspace is None or cspace is None:
+                continue
+            churn = (_host_kind(pspace) and _device_kind(cspace)) or \
+                (_device_kind(pspace) and _host_kind(cspace))
+            key = (pop.region.name, cop.region.name, cop.arg_keys[j])
+            if churn and key not in seen:
+                seen.add(key)
+                yield Diagnostic(
+                    "placement-churn", WARNING, prog.name,
+                    f"op{d.op} ({pop.region.name}) pins its result to "
+                    f"{pspace} but this op's hint moves the same leaf to "
+                    f"{cspace} — a host<->device round-trip on every "
+                    "replay",
+                    hint="align the producer's result_space with the "
+                         "consumer's placement hint (or drop one of them)",
+                    op=ci, region=cop.region.name, arg=cop.arg_keys[j])
+
+
+def _rule_halo(prog: RegionProgram, policy) -> Iterator[Diagnostic]:
+    """Halo declarations the sharded replay would silently get wrong:
+    ``halo_args`` entries that resolve to no captured argument (the
+    exchange skips them), halo_args without a stencil (width 0 — nothing
+    exchanged), stencils exchanging every leaf for want of ``halo_args``,
+    and chained stencil regions whose composed reach
+    (``compose_offsets``) exceeds the consumer's declared width — the
+    under-provisioning hazard of wide-halo (``halo_multiplier>1``)
+    ghost zones."""
+    from repro.cfd.dia import compose_offsets
+    from repro.core.shard_program import halo_width
+
+    seen_region: Set[int] = set()
+    seen_entry: Set[Tuple[int, Any]] = set()
+    seen_pair: Set[Tuple[str, str]] = set()
+
+    # per-op set of stencil ops transitively feeding its outputs through
+    # pointwise regions only (a stencil op re-syncs: its own halo operands
+    # are exchanged before it runs, so it cuts the chain)
+    ancestors: List[Set[int]] = []
+    for i, op in enumerate(prog.ops):
+        if op.region.stencil:
+            ancestors.append({i})
+        else:
+            s: Set[int] = set()
+            for d in op.leaves:
+                if isinstance(d, Ref):
+                    s |= ancestors[d.op]
+            ancestors.append(s)
+
+    for i, op in enumerate(prog.ops):
+        r = op.region
+        rkey = id(r)
+        if r.halo_args is not None and not r.stencil and \
+                rkey not in seen_region:
+            seen_region.add(rkey)
+            yield Diagnostic(
+                "halo-under-declaration", ERROR, prog.name,
+                f"declares halo_args={tuple(r.halo_args)} but no stencil; "
+                "inferred halo width is 0 and the sharded replay exchanges "
+                "nothing before this region reads its neighbors",
+                hint="declare the region's stencil offset table "
+                     "(repro.cfd.dia style) or drop halo_args",
+                op=i, region=r.name)
+        if r.stencil and r.halo_args is None and rkey not in seen_region:
+            seen_region.add(rkey)
+            yield Diagnostic(
+                "halo-under-declaration", WARNING, prog.name,
+                "declares a stencil but no halo_args; the sharded replay "
+                "exchanges ghost zones for EVERY array operand, including "
+                "coefficient stacks that multiply locally",
+                hint="declare halo_args=(<names or positions of the "
+                     "operands whose neighbors the stencil reads>,)",
+                op=i, region=r.name)
+        # unresolvable halo_args entries: the exchange silently skips them
+        if r.halo_args:
+            present = set(op.arg_keys)
+            for entry in r.halo_args:
+                ekey = (rkey, entry)
+                if ekey in seen_entry:
+                    continue
+                resolved = entry in present or (
+                    isinstance(entry, str)
+                    and r._param_index.get(entry) in present)
+                if not resolved:
+                    seen_entry.add(ekey)
+                    yield Diagnostic(
+                        "halo-under-declaration", ERROR, prog.name,
+                        f"halo_args entry {entry!r} matches no captured "
+                        "argument of this call; the sharded exchange "
+                        "silently skips it and the stencil reads stale "
+                        "ghost cells",
+                        hint="use the parameter name or positional index "
+                             "of an actual argument (see "
+                             f"parameters {tuple(r._param_index)} of "
+                             f"{r.name!r})",
+                        op=i, region=r.name, arg=entry)
+        # composed reach across chained stencil regions
+        if not r.stencil:
+            continue
+        for j in _halo_leaf_positions(op):
+            d = op.leaves[j]
+            if not isinstance(d, Ref):
+                continue
+            for a in ancestors[d.op]:
+                ar = prog.ops[a].region
+                if ar is r:
+                    continue        # same region chained: wide-halo's k*w
+                pair = (ar.name, r.name)
+                if pair in seen_pair:
+                    continue
+                seen_pair.add(pair)
+                composed = compose_offsets(ar.stencil, r.stencil)
+                axes = sorted({ax for ax, _ in composed})
+                worse = [ax for ax in axes
+                         if halo_width(composed, ax) > r.stencil_width(ax)]
+                if worse:
+                    reach = {ax: halo_width(composed, ax) for ax in worse}
+                    yield Diagnostic(
+                        "halo-under-declaration", WARNING, prog.name,
+                        f"halo operand chains through stencil region "
+                        f"{ar.name!r} (op{a}); composed neighbor reach "
+                        f"{reach} exceeds this region's declared width "
+                        f"{ {ax: r.stencil_width(ax) for ax in worse} } — "
+                        "wide-halo replay (halo_multiplier>1) would "
+                        "under-provision its ghost zones",
+                        hint="keep halo_multiplier=1 across this chain or "
+                             "declare the composed stencil "
+                             "(compose_offsets) on the consumer",
+                        op=i, region=r.name, arg=op.arg_keys[j])
+
+
+def _rule_variant_contract(prog: RegionProgram, policy) -> Iterator[Diagnostic]:
+    """Every registered non-ref variant must bind the captured call's
+    arity (same top-level args/kwargs as the ref function it can be
+    swapped for at any replay, under any selector)."""
+    seen: Set[Tuple[int, str]] = set()
+    for i, op in enumerate(prog.ops):
+        r = op.region
+        ints = [k for k in op.arg_keys if isinstance(k, int)]
+        n_pos = max(ints) + 1 if ints else 0
+        kwnames = {k for k in op.arg_keys if isinstance(k, str)}
+        for vname, vfn in r._variants.items():
+            if vname == "ref" or (id(r), vname) in seen:
+                continue
+            seen.add((id(r), vname))
+            try:
+                sig = inspect.signature(vfn)
+            except (TypeError, ValueError):
+                continue                     # not introspectable: skip
+            try:
+                sig.bind(*([None] * n_pos), **{k: None for k in kwnames})
+            except TypeError as exc:
+                yield Diagnostic(
+                    "variant-contract", ERROR, prog.name,
+                    f"variant {vname!r} cannot bind the captured call "
+                    f"({n_pos} positional"
+                    + (f", kwargs {sorted(kwnames)}" if kwnames else "")
+                    + f"): {exc}; any selector resolving {vname!r} "
+                    "crashes this replay",
+                    hint="give the variant the same signature as the ref "
+                         "function (declare-variant contract)",
+                    op=i, region=r.name)
+
+
+def _rule_budget(prog: RegionProgram, policy,
+                 budget) -> Iterator[Diagnostic]:
+    """Static peak-resident-bytes watermark along the trace vs a
+    ``MemoryBudget``: liveness intervals per leaf (born at its producer,
+    dead after its last consumer — program outputs live to the end),
+    byte sizes from the captured example leaves and out metadata."""
+    limit = getattr(budget, "limit_bytes", None)
+    if limit is None:
+        return
+    n_ops = len(prog.ops)
+    birth: Dict[Any, int] = {}
+    death: Dict[Any, int] = {}
+    size: Dict[Any, int] = {}
+
+    def note(d, born: int, used_at: int):
+        key = _desc_key(d)
+        if key not in birth:
+            birth[key] = born
+            size[key] = _leaf_nbytes(prog, d)
+        death[key] = max(death.get(key, born), used_at)
+
+    for slot, x in enumerate(prog._example_in_leaves):
+        if _is_array(x):
+            note(In(slot), 0, 0)
+    for i, op in enumerate(prog.ops):
+        for d in op.leaves:
+            if isinstance(d, Ref):
+                note(d, d.op, i)
+            elif isinstance(d, In):
+                note(d, 0, i)
+            elif isinstance(d, Lit) and _is_array(d.value):
+                note(d, 0, n_ops)            # trace-owned constant
+        meta = getattr(op, "out_meta", None) or []
+        for j, m in enumerate(meta):
+            if m is not None:
+                note(Ref(i, j), i, i)
+    for d in prog.out_leaves:
+        if isinstance(d, (Ref, In)):
+            key = _desc_key(d)
+            if key in death:
+                death[key] = n_ops
+
+    peak, peak_op = 0, 0
+    for k in range(n_ops):
+        live = sum(size[key] for key in birth
+                   if birth[key] <= k <= death[key])
+        if live > peak:
+            peak, peak_op = live, k
+    for i, op in enumerate(prog.ops):
+        distinct = {_desc_key(d): d for d in op.leaves}
+        working = sum(_leaf_nbytes(prog, d) for d in distinct.values()) \
+            + _out_nbytes(op)
+        if working > limit:
+            yield Diagnostic(
+                "budget-infeasibility", ERROR, prog.name,
+                f"single-call working set {working} B (operands + "
+                f"results) exceeds the memory budget "
+                f"({getattr(budget, 'name', 'device')}: {limit} B); no "
+                "staging schedule fits this op",
+                hint="shrink the op (chunk/shard its operands) or raise "
+                     "the budget",
+                op=i, region=op.region.name)
+    if peak > limit:
+        yield Diagnostic(
+            "budget-infeasibility", WARNING, prog.name,
+            f"peak resident watermark {peak} B at op{peak_op} "
+            f"({prog.ops[peak_op].region.name}) exceeds the memory "
+            f"budget ({getattr(budget, 'name', 'device')}: {limit} B); "
+            "replay completes only by spilling/paging (degraded)",
+            hint="free dead values earlier (reorder ops), offload "
+                 "long-lived leaves host-side, or raise the budget",
+            op=peak_op, region=prog.ops[peak_op].region.name)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _find_budget(policy, budget):
+    if budget is not None:
+        return budget
+    b = getattr(policy, "budget", None)
+    if b is not None:
+        return b
+    return getattr(getattr(policy, "stager", None), "budget", None)
+
+
+def verify_program(prog: RegionProgram, policy=None, *, budget=None,
+                   ledger=None, rules: Optional[Iterable[str]] = None
+                   ) -> AnalysisReport:
+    """Run the rule set over one captured program under one policy.
+
+    ``policy=None`` runs the policy-independent rules only (dataflow,
+    halo, variants, declared placement hints).  ``budget`` overrides the
+    budget discovered on the policy (``policy.budget`` /
+    ``policy.stager.budget``).  ``ledger`` (a
+    :class:`~repro.core.ledger.Ledger`) accumulates per-rule finding
+    counts into its ``analysis`` coverage-report section.
+    """
+    wanted = set(rules) if rules is not None else set(RULES)
+    findings: List[Diagnostic] = []
+    if "donate-after-use" in wanted:
+        findings += _rule_donate_after_use(prog, policy)
+    if "donate-pooled" in wanted and policy is not None:
+        findings += _rule_donate_pooled(prog, policy)
+    if "dead-result" in wanted:
+        findings += _rule_dead_result(prog, policy)
+    if "placement-churn" in wanted:
+        findings += _rule_placement_churn(prog, policy)
+    if "halo-under-declaration" in wanted:
+        findings += _rule_halo(prog, policy)
+    if "variant-contract" in wanted:
+        findings += _rule_variant_contract(prog, policy)
+    if "budget-infeasibility" in wanted:
+        b = _find_budget(policy, budget)
+        if b is not None:
+            findings += _rule_budget(prog, policy, b)
+    report = AnalysisReport(
+        program=prog.name,
+        policy=getattr(policy, "name", None) if policy is not None else None,
+        findings=findings, n_ops=len(prog.ops))
+    if ledger is not None:
+        for d in report.findings:
+            ledger.analysis_record(d.rule)
+        ledger.analysis_record(f"findings_{ERROR}", len(report.errors))
+        ledger.analysis_record(f"findings_{WARNING}", len(report.warnings))
+        ledger.analysis_record("programs_verified")
+    return report
+
+
+def check_halo(prog: RegionProgram) -> AnalysisReport:
+    """The halo rule alone — what ``ShardExecutor`` consults before
+    decomposing a program (error findings veto the replay; composed-reach
+    warnings don't, wide-halo parity tests exercise them)."""
+    return verify_program(prog, rules=("halo-under-declaration",))

@@ -99,6 +99,11 @@ class Ledger:
         # (occupancy, high-water bytes) take the max.
         self.serve_counters: Dict[str, float] = {}
         self.serve_gauges: Dict[str, float] = {}
+        # static-verifier accounting (repro.analysis): findings per rule
+        # id plus per-severity totals.  Counters sum on merge and — like
+        # cutoffs and calibrated variants — persist across reset_timings()
+        # (verification happens once at capture, not per replay).
+        self.analysis_counters: Dict[str, float] = {}
         # pools attached for byte-level accounting (paper C4): their live
         # PoolStats are snapshotted into every coverage_report()
         self._pools: Dict[str, object] = {}
@@ -164,6 +169,13 @@ class Ledger:
         value, the ledger keeps the peak."""
         self.serve_gauges[key] = max(self.serve_gauges.get(key, value), value)
 
+    # -- static-verifier accounting (repro.analysis) -------------------
+    def analysis_record(self, key: str, n: float = 1) -> None:
+        """Count one static-verifier event (a finding per rule id, a
+        ``findings_error``/``findings_warning`` total, a verified
+        program) into the report's ``analysis`` section."""
+        self.analysis_counters[key] = self.analysis_counters.get(key, 0) + n
+
     def attach_pool(self, name: str, pool) -> None:
         """Surface a pool's byte-level PoolStats in coverage_report()
         (``pools`` section).  Re-attaching under the same name replaces."""
@@ -189,6 +201,8 @@ class Ledger:
             #                             and cutoff persist like settings
         self.serve_counters.clear()     # per-run accounting, like timings;
         self.serve_gauges.clear()       # attached pools persist like settings
+        # analysis_counters persist: verification is per capture, not per
+        # run — resetting timings must not erase what the verifier found
 
     def merge_from(self, other: "Ledger") -> None:
         """Accumulate another ledger's rows into this one (rows matched by
@@ -220,6 +234,8 @@ class Ledger:
             self.serve_counters[k] = self.serve_counters.get(k, 0) + v
         for k, v in other.serve_gauges.items():
             self.serve_gauges[k] = max(self.serve_gauges.get(k, v), v)
+        for k, v in other.analysis_counters.items():
+            self.analysis_counters[k] = self.analysis_counters.get(k, 0) + v
 
     @classmethod
     def merged(cls, ledgers, name: str = "node") -> "Ledger":
@@ -236,6 +252,7 @@ class Ledger:
         self.regions.clear()
         self.serve_counters.clear()
         self.serve_gauges.clear()
+        self.analysis_counters.clear()
         self._pools.clear()
 
     # ------------------------------------------------------------------
@@ -276,6 +293,9 @@ class Ledger:
         if self.serve_counters or self.serve_gauges:
             # serving engine (repro.serve): scheduler counters + gauges
             extra["serve"] = {**self.serve_counters, **self.serve_gauges}
+        if self.analysis_counters:
+            # static verifier (repro.analysis): findings per rule id
+            extra["analysis"] = dict(self.analysis_counters)
         if self._pools:
             # byte-level pool accounting (paper C4): live PoolStats snapshot
             pools = {}

@@ -115,6 +115,10 @@ class OpCall:
     example_size: int            # size_fn at capture (routing prediction)
     n_out: int = 0
     out_tree: Any = None
+    #: per-output-leaf (shape, dtype, nbytes) recorded at capture — what
+    #: the static verifier (repro.analysis) sizes Ref edges with; None
+    #: per non-array leaf (or entirely, for pre-analysis pickles)
+    out_meta: Any = None
 
 
 def _resolver(env: List[List[Any]], in_leaves: List[Any]) -> Callable:
@@ -178,6 +182,17 @@ class RegionProgram:
         return (f"RegionProgram({self.name!r}: {len(self.ops)} ops, "
                 f"{self.n_inputs} input leaves, {edges} dataflow edges, "
                 f"{self.n_constants} constants)")
+
+    def verify(self, policy=None, *, budget=None, ledger=None):
+        """Statically verify this trace (:mod:`repro.analysis`): donation
+        liveness, dead results, placement churn, halo declarations,
+        variant contracts, and — when ``policy``/``budget`` carries a
+        :class:`~repro.core.oversub.MemoryBudget` — the peak-resident
+        watermark.  Returns an
+        :class:`~repro.analysis.report.AnalysisReport`; callers gate on
+        ``.errors`` / ``.raise_if_errors()``."""
+        from repro.analysis import verify_program
+        return verify_program(self, policy, budget=budget, ledger=ledger)
 
     # -- replay ----------------------------------------------------------
     def _input_leaves(self, inputs: tuple) -> List[Any]:
@@ -284,13 +299,19 @@ class RegionProgram:
         return name
 
 
-def capture(fn: Callable, *example_inputs, name: str = "program"
-            ) -> RegionProgram:
+def capture(fn: Callable, *example_inputs, name: str = "program",
+            verify: Any = None) -> RegionProgram:
     """Record ``fn(run, *example_inputs)`` into a :class:`RegionProgram`.
 
     ``fn`` receives a recording ``run(region, *args, **kwargs)`` callable in
     place of ``Executor.run``; every call is executed eagerly (so Python
     control flow sees concrete values) and recorded with its dataflow.
+
+    ``verify`` runs the static verifier (:mod:`repro.analysis`) on the
+    fresh trace before returning it: pass an ``ExecutionPolicy`` to lint
+    under it, or ``True`` for the policy-independent rules only.
+    Error-severity findings raise
+    :class:`~repro.analysis.report.ProgramVerificationError`.
     """
     prog = RegionProgram(name)
     in_leaves, prog.in_tree = jax.tree.flatten(example_inputs)
@@ -317,6 +338,9 @@ def capture(fn: Callable, *example_inputs, name: str = "program"
         out_leaves = jax.tree.leaves(out)
         op.out_tree = jax.tree.structure(out)
         op.n_out = len(out_leaves)
+        op.out_meta = [
+            (tuple(ol.shape), str(ol.dtype), int(ol.nbytes))
+            if _is_array(ol) else None for ol in out_leaves]
         k = len(prog.ops)
         for j, ol in enumerate(out_leaves):
             if _is_array(ol):
@@ -330,6 +354,8 @@ def capture(fn: Callable, *example_inputs, name: str = "program"
     prog.out_leaves = [origin.get(id(x), Lit(x)) if _is_array(x) else Lit(x)
                        for x in res_leaves]
     del keepalive
+    if verify:
+        prog.verify(None if verify is True else verify).raise_if_errors()
     return prog
 
 

@@ -45,6 +45,7 @@ only, and nothing inside the repo imports them (CI gates it via
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 import weakref
 from typing import (Any, Callable, Dict, Mapping, Optional, Protocol,
@@ -171,6 +172,49 @@ class Region:                           # hashable, usable as dict/set keys
         self._jvar: Dict[str, Callable] = {}
         self._exec: Dict[Tuple[str, str], Callable] = {}
         self._param_index = _param_indices(self.fn)
+        self._validate_donate_args()
+
+    def _validate_donate_args(self) -> None:
+        """Fail at declaration, not jit time: donate_args must be
+        non-negative positional indices inside the signature (when it is
+        introspectable and takes no *args), and must not overlap
+        halo_args — a donated buffer is deleted by XLA while the sharded
+        halo exchange still needs to read its neighbors."""
+        if not self.donate_args:
+            return
+        bad = [d for d in self.donate_args
+               if not isinstance(d, int) or d < 0]
+        if bad:
+            raise ValueError(
+                f"region {self.name!r}: donate_args must be non-negative "
+                f"positional indices, got {bad!r}")
+        try:
+            params = list(inspect.signature(self.fn).parameters.values())
+        except (TypeError, ValueError):
+            params = None                      # not introspectable: skip
+        if params is not None and not any(
+                p.kind is inspect.Parameter.VAR_POSITIONAL for p in params):
+            n_pos = sum(1 for p in params if p.kind in (
+                inspect.Parameter.POSITIONAL_ONLY,
+                inspect.Parameter.POSITIONAL_OR_KEYWORD))
+            out = [d for d in self.donate_args if d >= n_pos]
+            if out:
+                raise ValueError(
+                    f"region {self.name!r}: donate_args {out} out of range "
+                    f"for a function with {n_pos} positional parameters "
+                    f"({tuple(self._param_index)})")
+        if self.halo_args:
+            halo_idx = {h for h in self.halo_args if isinstance(h, int)}
+            halo_idx |= {self._param_index[h] for h in self.halo_args
+                         if isinstance(h, str) and h in self._param_index}
+            clash = sorted(halo_idx & set(self.donate_args))
+            if clash:
+                raise ValueError(
+                    f"region {self.name!r}: donate_args {clash} overlap "
+                    f"halo_args {tuple(self.halo_args)}; a donated operand "
+                    "is deleted by XLA while the sharded halo exchange "
+                    "still reads its ghost cells — donate a different "
+                    "argument or drop it from halo_args")
 
     # -- implementation variants (declare variant) -----------------------
     @property

@@ -243,6 +243,10 @@ class ShardExecutor:
         self._taken_rows: set = set()
         self._halo_widths = weakref.WeakKeyDictionary()    # Region -> dict
         self._halo_cache: dict = {}     # (row, ((dim, w), ...)) -> Region
+        # programs whose halo declarations already passed the static
+        # verifier on this executor (repro.analysis; error findings veto
+        # decomposition — a silently skipped exchange corrupts values)
+        self._halo_verified = weakref.WeakKeyDictionary()  # prog -> True
         self._boundary_regions = weakref.WeakKeyDictionary()
         self._registry = Ledger(self.mode + "-rows")       # halo-name registry
         # wide-halo schedule state: applications seen per stencil row — the
@@ -580,7 +584,26 @@ class ShardExecutor:
         return None
 
     # -- program replay --------------------------------------------------
+    def _verify_halo(self, prog: RegionProgram) -> None:
+        """Pre-flight the program's halo declarations once per executor
+        (static, no replay): an unresolvable ``halo_args`` entry or a
+        halo_args-without-stencil region would make the exchange silently
+        skip operands and corrupt the decomposed values — error-severity
+        findings veto the replay.  Composed-reach findings are warnings
+        (the wide-halo parity tests exercise those chains deliberately)
+        and do not block."""
+        if self._halo_verified.get(prog):
+            return
+        from repro.analysis import check_halo
+        errors = check_halo(prog).errors
+        if errors:
+            raise ValueError(
+                f"sharded replay of {prog.name!r} vetoed by halo "
+                "verification:\n" + "\n".join(f"  {d}" for d in errors))
+        self._halo_verified[prog] = True
+
     def replay_program(self, prog: RegionProgram, *inputs):
+        self._verify_halo(prog)
         if self.overlap:
             with ThreadPoolExecutor(max_workers=1) as tp:
                 return self._replay(prog, inputs, tp)

@@ -331,6 +331,20 @@ def _prefill_inputs(cfg, args, prompts):
     return batch
 
 
+def _verify_programs(ex, *progs):
+    """``--verify``: statically lint freshly captured programs under the
+    serving executor's policy (repro.analysis) before any replay; findings
+    print, error severity aborts startup (docs/ANALYSIS.md)."""
+    for prog in progs:
+        rep = prog.verify(ex.policy, ledger=ex.ledger)
+        print(f"[verify] {rep.summary()}")
+        for d in rep.findings:
+            print(f"    {d}")
+        if rep.errors:
+            raise SystemExit(f"[verify] {prog.name!r} has error-severity "
+                             "findings; refusing to serve")
+
+
 def _engine_demo(cfg, mesh, params, ex, args, max_len):
     """Continuous-batching engine under the launcher flags: seeded Poisson
     traffic with ragged prompt/gen lengths through
@@ -360,6 +374,8 @@ def _engine_demo(cfg, mesh, params, ex, args, max_len):
                       budget=budget)
     engine = ServeEngine(cfg, mesh, params, ex, max_len=max_len,
                          n_slots=args.slots, kv=kv)
+    if args.verify:
+        _verify_programs(ex, engine.tick_prog)
     lens = sorted({max(2, args.prompt_len // 2), args.prompt_len})
     gens = sorted({1, max(2, args.gen // 2), args.gen})
     reqs = make_traffic(args.seed, args.requests, cfg.vocab,
@@ -407,6 +423,12 @@ def main(argv=None):
     ap.add_argument("--policy", default="unified", choices=POLICY_CHOICES,
                     help="ExecutionPolicy the serving regions run under "
                          "(adaptive threads cfg.memory.target_cutoff)")
+    ap.add_argument("--verify", action="store_true",
+                    help="statically lint every captured program "
+                         "(PREFILL/DECODE_STEP/KV_APPEND, or the engine "
+                         "tick) under the serving policy at startup; "
+                         "error-severity findings abort (repro.analysis, "
+                         "docs/ANALYSIS.md)")
     ap.add_argument("--report", action="store_true",
                     help="print the run's coverage_report() as JSON")
     ap.add_argument("--sync-every", type=int, default=0, metavar="K",
@@ -485,12 +507,16 @@ def main(argv=None):
     prefill_prog = capture_prefill_program(regions, batch,
                                            T.init_cache(cfg, args.batch,
                                                         max_len))
+    if args.verify:
+        _verify_programs(ex, prefill_prog)
     t0 = time.time()
     tok, cache = prefill_prog.replay(ex, batch,
                                      T.init_cache(cfg, args.batch, max_len))
     t_prefill = time.time() - t0
     decode_prog = capture_decode_program(regions, args.prompt_len, args.gen,
                                          tok, cache)
+    if args.verify:
+        _verify_programs(ex, decode_prog)
     t1 = time.time()
     toks = decode_prog.replay(ex, tok, cache)
     t_decode = time.time() - t1

@@ -49,7 +49,8 @@ from repro.train import step as S
 
 def build_trainer(cfg: ModelConfig, mesh, *, lr=3e-4, offload_optimizer=False,
                   q_chunk=512, seed=0, policy: str = "unified",
-                  executor: Optional[Executor] = None):
+                  executor: Optional[Executor] = None,
+                  verify: bool = False):
     """Returns ``(init_fn, capture_fn, ex)``.
 
     ``init_fn() -> state`` builds sharded params + optimizer state.
@@ -97,6 +98,18 @@ def build_trainer(cfg: ModelConfig, mesh, *, lr=3e-4, offload_optimizer=False,
 
     def capture_fn(state, batch):
         prog = S.capture_train_program(regions, state, batch)
+        if verify:
+            # --verify: lint the fresh FWD_BWD + ADAMW_UPDATE trace under
+            # the training policy before the first replay (repro.analysis;
+            # supervisor re-captures re-verify the same way)
+            rep = prog.verify(ex.policy, ledger=ex.ledger)
+            print(f"[verify] {rep.summary()}")
+            for d in rep.findings:
+                print(f"    {d}")
+            if rep.errors:
+                raise SystemExit(f"[verify] {prog.name!r} has "
+                                 "error-severity findings; refusing to "
+                                 "train")
 
         def step_fn(state, batch):
             return prog.replay(ex, state, batch)
@@ -118,6 +131,11 @@ def main(argv=None):
     ap.add_argument("--policy", default="unified", choices=POLICY_CHOICES,
                     help="ExecutionPolicy the train-step regions run under "
                          "(adaptive threads cfg.memory.target_cutoff)")
+    ap.add_argument("--verify", action="store_true",
+                    help="statically lint the captured train-step program "
+                         "(FWD_BWD + ADAMW_UPDATE) under the training "
+                         "policy at capture; error-severity findings "
+                         "abort (repro.analysis, docs/ANALYSIS.md)")
     ap.add_argument("--report", action="store_true",
                     help="print the run's coverage_report() as JSON")
     ap.add_argument("--ckpt-dir", default="")
@@ -135,7 +153,8 @@ def main(argv=None):
     mesh = make_smoke_mesh()
     init_fn, capture_fn, ex = build_trainer(
         cfg, mesh, lr=args.lr, offload_optimizer=args.offload_optimizer,
-        q_chunk=min(512, args.seq), seed=args.seed, policy=args.policy)
+        q_chunk=min(512, args.seq), seed=args.seed, policy=args.policy,
+        verify=args.verify)
     src = make_source(args.data, cfg.vocab, path=args.data_path,
                       seed=args.seed)
 

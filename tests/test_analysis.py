@@ -1,0 +1,436 @@
+"""The static program verifier (repro.analysis, docs/ANALYSIS.md):
+seven planted-defect programs each firing exactly one rule, the in-repo
+program corpus linting error-clean under all three policies, the
+capture/driver/sharded-gate wiring, `donate_args` declaration
+validation, `interval_overlap` edges, the ledger's analysis counters
+across merge/reset, and the HLO cost bridge."""
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (ERROR, WARNING, AnalysisReport, Diagnostic,
+                            ProgramVerificationError, RULES, check_halo,
+                            verify_program)
+from repro.core.ledger import Ledger
+from repro.core.oversub import MemoryBudget
+from repro.core.program import capture, interval_overlap
+from repro.core.regions import (AdaptivePolicy, DiscretePolicy,
+                                UnifiedPolicy, region)
+from repro.core.umem import MemSpace
+
+def X2():
+    """Fresh per call: donating captures delete their example inputs."""
+    return jnp.ones((4, 4))
+
+
+def X3():
+    return jnp.ones((4, 4, 4))
+
+
+def only_rule(report, rule):
+    """Assert the report fired exactly one rule, and return its findings."""
+    assert {d.rule for d in report.findings} == {rule}, report.findings
+    return report.findings
+
+
+# ---------------------------------------------------------------------------
+# Planted defects: one program per rule, each firing exactly that rule
+# ---------------------------------------------------------------------------
+
+class TestPlantedDefects:
+
+    def test_donate_after_use(self):
+        led = Ledger("t_donate")
+
+        @region("A", ledger=led)
+        def a(x):
+            return x + 1.0
+
+        @region("B", ledger=led)
+        def b(x, y):
+            return x * y
+
+        def fn(run, x):
+            h = run(a, x)
+            return run(b, h, x)     # x is read again AFTER a consumed it
+
+        prog = capture(fn, X2(), name="donate_test")
+        # plant post-capture: a donating capture of this program would
+        # already crash replaying eagerly — the verifier must catch the
+        # hazard from declarations alone
+        a.donate_args = (0,)
+        rep = verify_program(prog, UnifiedPolicy())
+        finds = only_rule(rep, "donate-after-use")
+        assert rep.errors and not rep.ok
+        assert finds[0].op == 0 and finds[0].region == "A"
+        with pytest.raises(ProgramVerificationError):
+            rep.raise_if_errors()
+
+    def test_donate_pooled_fires_only_under_staging_policy(self):
+        led = Ledger("t_pool")
+
+        @region("C", ledger=led, donate_args=(0,))
+        def cc(x):
+            return x * 2.0
+
+        prog = capture(lambda run, x: run(cc, x), X2(), name="pool_test")
+        rep = verify_program(prog, DiscretePolicy())
+        finds = only_rule(rep, "donate-pooled")
+        assert finds[0].severity == WARNING and rep.ok
+        # unified never stages: the same declaration is clean there
+        assert not verify_program(prog, UnifiedPolicy()).findings
+
+    def test_dead_result(self):
+        led = Ledger("t_dead")
+
+        @region("D", ledger=led)
+        def dd(x):
+            return x + 1.0
+
+        @region("E", ledger=led)
+        def ee(x):
+            return x * 3.0
+
+        def fn(run, x):
+            _ = run(dd, x)          # result dropped on the floor
+            return run(ee, x)
+
+        rep = verify_program(capture(fn, X2(), name="dead_test"),
+                             UnifiedPolicy())
+        finds = only_rule(rep, "dead-result")
+        assert finds[0].severity == WARNING and finds[0].region == "D"
+
+    def test_placement_churn(self):
+        led = Ledger("t_churn")
+
+        @region("P", ledger=led, result_space=MemSpace.HOST)
+        def pp(x):
+            return x + 1.0
+
+        @region("Q", ledger=led, placement={0: MemSpace.DEVICE})
+        def qq(x):
+            return x * 2.0
+
+        def fn(run, x):
+            return run(qq, run(pp, x))   # host-pinned edge into device hint
+
+        rep = verify_program(capture(fn, X3(), name="churn_test"),
+                             UnifiedPolicy())
+        finds = only_rule(rep, "placement-churn")
+        assert finds[0].severity == WARNING and finds[0].arg == 0
+
+    def test_halo_unresolvable_entry(self):
+        led = Ledger("t_halo")
+
+        @region("H", ledger=led, stencil=((2, 1), (2, -1)),
+                halo_args=("bogus",))
+        def hh(x):
+            return x * 1.0
+
+        prog = capture(lambda run, x: run(hh, x), X3(), name="halo_test")
+        rep = verify_program(prog, UnifiedPolicy())
+        finds = only_rule(rep, "halo-under-declaration")
+        assert rep.errors and finds[0].arg == "bogus"
+        # the single-rule gate ShardExecutor consults sees the same error
+        assert check_halo(prog).errors
+
+    def test_variant_contract(self):
+        led = Ledger("t_var")
+
+        @region("V", ledger=led)
+        def vv(x, y):
+            return x + y
+
+        vv.variant("pallas", lambda x: x)   # wrong arity: cannot bind
+        rep = verify_program(
+            capture(lambda run, a, b: run(vv, a, b), X3(), X3(),
+                    name="variant_test"),
+            UnifiedPolicy())
+        finds = only_rule(rep, "variant-contract")
+        assert rep.errors and "pallas" in finds[0].message
+
+    def test_budget_infeasibility(self):
+        led = Ledger("t_budget")
+
+        @region("W", ledger=led)
+        def ww(x):
+            return x * 2.0
+
+        prog = capture(lambda run, x: run(ww, x), X3(), name="budget_test")
+        # 4x4x4 f32 in + out = 512 B against a 64 B budget: the single
+        # call can never fit (error) and the watermark is over (warning)
+        rep = verify_program(prog, UnifiedPolicy(), budget=MemoryBudget(64))
+        only_rule(rep, "budget-infeasibility")
+        assert rep.errors and rep.warnings
+        # no budget anywhere on the policy -> the rule stays silent
+        assert not verify_program(prog, UnifiedPolicy()).findings
+
+    def test_every_rule_has_a_planted_trigger(self):
+        """The seven cases above cover the whole registered rule set."""
+        planted = {"donate-after-use", "donate-pooled", "dead-result",
+                   "placement-churn", "halo-under-declaration",
+                   "variant-contract", "budget-infeasibility"}
+        assert planted == set(RULES)
+
+
+# ---------------------------------------------------------------------------
+# Wiring: capture(verify=), sharded halo gate, report plumbing
+# ---------------------------------------------------------------------------
+
+class TestWiring:
+
+    def test_capture_verify_raises_on_planted_error(self):
+        led = Ledger("t_cap")
+
+        @region("HB", ledger=led, stencil=((2, 1), (2, -1)),
+                halo_args=("nope",))
+        def hb(x):
+            return x + 1.0
+
+        with pytest.raises(ProgramVerificationError) as ei:
+            capture(lambda run, x: run(hb, x), X3(), name="cap_bad",
+                    verify=UnifiedPolicy())
+        assert ei.value.report.errors
+
+    def test_capture_verify_passes_clean_program(self):
+        led = Ledger("t_cap_ok")
+
+        @region("OK", ledger=led)
+        def ok(x):
+            return x + 1.0
+
+        prog = capture(lambda run, x: run(ok, x), X2(), name="cap_ok",
+                       verify=True)
+        assert verify_program(prog, UnifiedPolicy()).ok
+
+    def test_shard_executor_vetoes_bad_halo_program(self):
+        from repro.core.shard_program import ShardExecutor
+        from repro.launch.mesh import make_smoke_mesh
+
+        led = Ledger("t_gate")
+
+        @region("HG", ledger=led, stencil=((2, 1), (2, -1)),
+                halo_args=("missing",))
+        def hg(x):
+            return x * 1.0
+
+        prog = capture(lambda run, x: run(hg, x), X3(), name="gate_bad")
+        sx = ShardExecutor(UnifiedPolicy(), make_smoke_mesh())
+        with pytest.raises(ValueError, match="halo verification"):
+            sx.replay_program(prog, X3())
+
+    def test_shard_executor_gate_caches_good_programs(self):
+        from repro.core.shard_program import ShardExecutor
+        from repro.launch.mesh import make_smoke_mesh
+
+        led = Ledger("t_gate_ok")
+
+        @region("G", ledger=led, stencil=((0, 1), (0, -1)),
+                halo_args=("x",))
+        def gg(x):
+            return x * 1.0
+
+        prog = capture(lambda run, x: run(gg, x), X3(), name="gate_ok")
+        sx = ShardExecutor(UnifiedPolicy(), make_smoke_mesh())
+        sx._verify_halo(prog)
+        assert prog in sx._halo_verified      # second replay skips the pass
+        sx._verify_halo(prog)
+
+    def test_report_ordering_and_serialization(self):
+        finds = [Diagnostic("dead-result", WARNING, "p", "w", op=3),
+                 Diagnostic("donate-after-use", ERROR, "p", "e", op=7)]
+        rep = AnalysisReport(program="p", policy="unified",
+                             findings=finds, n_ops=9)
+        assert [d.severity for d in rep.findings] == [ERROR, WARNING]
+        d = rep.as_dict()
+        assert (d["n_errors"], d["n_warnings"]) == (1, 1)
+        assert d["findings"][0]["rule"] == "donate-after-use"
+        assert "7" in str(rep.findings[0])
+        assert set(rep.by_rule()) == {"donate-after-use", "dead-result"}
+
+
+# ---------------------------------------------------------------------------
+# The in-repo corpus lints error-clean under all three policies
+# ---------------------------------------------------------------------------
+
+POLICIES = {"unified": UnifiedPolicy, "discrete": DiscretePolicy,
+            "adaptive": AdaptivePolicy}
+
+
+@pytest.mark.parametrize("name", ["simple_step", "serve_prefill",
+                                  "serve_decode", "engine_tick",
+                                  "train_step"])
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_corpus_error_clean(name, policy):
+    """Every captured program the repo ships must verify with zero
+    error-severity findings under every built-in policy — the same
+    invariant the CI `python -m repro.analysis --all` gate enforces."""
+    from repro.analysis import programs as corpus
+    ((_, prog),) = corpus.build_programs([name])
+    rep = prog.verify(POLICIES[policy]())
+    assert rep.ok, f"{rep.summary()}:\n" + "\n".join(
+        f"  {d}" for d in rep.errors)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: donate_args declaration validation
+# ---------------------------------------------------------------------------
+
+class TestDonateArgsValidation:
+
+    def test_negative_and_non_int_rejected(self):
+        with pytest.raises(ValueError, match="non-negative"):
+            region("bad_neg", ledger=Ledger("v1"),
+                   donate_args=(-1,))(lambda x: x)
+        with pytest.raises(ValueError, match="non-negative"):
+            region("bad_str", ledger=Ledger("v2"),
+                   donate_args=("x",))(lambda x: x)
+
+    def test_out_of_range_rejected(self):
+        with pytest.raises(ValueError, match="out of range"):
+            region("bad_range", ledger=Ledger("v3"),
+                   donate_args=(2,))(lambda x, *, k=None: x)
+
+    def test_var_positional_skips_range_check(self):
+        r = region("varargs", ledger=Ledger("v4"),
+                   donate_args=(5,))(lambda *xs: xs[0])
+        assert r.donate_args == (5,)
+
+    def test_halo_overlap_rejected_by_name_and_index(self):
+        with pytest.raises(ValueError, match="overlap halo_args"):
+            region("clash_name", ledger=Ledger("v5"), donate_args=(1,),
+                   stencil=((0, 1), (0, -1)),
+                   halo_args=("x",))(lambda c, x: c * x)
+        with pytest.raises(ValueError, match="overlap halo_args"):
+            region("clash_idx", ledger=Ledger("v6"), donate_args=(0,),
+                   stencil=((0, 1), (0, -1)),
+                   halo_args=(0,))(lambda x: x)
+
+    def test_valid_declaration_passes(self):
+        r = region("fine", ledger=Ledger("v7"), donate_args=(0,),
+                   stencil=((0, 1), (0, -1)),
+                   halo_args=("x",))(lambda c, x: c * x)
+        assert r.donate_args == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: interval_overlap edges
+# ---------------------------------------------------------------------------
+
+class TestIntervalOverlap:
+
+    def test_empty_spans(self):
+        assert interval_overlap(0.0, 1.0, []) == 0.0
+
+    def test_zero_length_interval(self):
+        assert interval_overlap(0.5, 0.5, [(0.0, 1.0)]) == 0.0
+
+    def test_zero_length_span(self):
+        assert interval_overlap(0.0, 1.0, [(0.5, 0.5)]) == 0.0
+
+    def test_fully_contained_span(self):
+        assert interval_overlap(0.0, 1.0, [(0.25, 0.75)]) == 0.5
+
+    def test_interval_inside_span(self):
+        assert interval_overlap(0.25, 0.75, [(0.0, 1.0)]) == 0.5
+
+    def test_adjacent_spans_no_double_count(self):
+        assert interval_overlap(0.0, 1.0, [(0.0, 0.5), (0.5, 1.0)]) == 1.0
+
+    def test_disjoint_span_clamps_to_zero(self):
+        assert interval_overlap(0.0, 1.0, [(2.0, 3.0)]) == 0.0
+        assert interval_overlap(2.0, 3.0, [(0.0, 1.0)]) == 0.0
+
+    def test_partial_overlap_both_ends(self):
+        assert interval_overlap(0.4, 1.6, [(0.0, 0.5), (1.5, 2.0)]) == \
+            pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: ledger analysis counters across record/merge/reset/clear
+# ---------------------------------------------------------------------------
+
+class TestLedgerAnalysisCounters:
+
+    def make_report_into(self, ledger):
+        led = Ledger("t_lc")
+
+        @region("LC", ledger=led)
+        def lc(x):
+            return x + 1.0
+
+        def fn(run, x):
+            _ = run(lc, x)          # planted dead-result warning
+            return run(lc, x)
+
+        prog = capture(fn, X2(), name="lc_test")
+        return verify_program(prog, UnifiedPolicy(), ledger=ledger)
+
+    def test_verify_records_counters(self):
+        ldg = Ledger("rec")
+        rep = self.make_report_into(ldg)
+        assert rep.warnings and not rep.errors
+        assert ldg.analysis_counters["programs_verified"] == 1
+        assert ldg.analysis_counters["findings_warning"] == 1
+        assert ldg.analysis_counters["findings_error"] == 0
+        assert ldg.analysis_counters["dead-result"] == 1
+
+    def test_merge_sums_and_merged_aggregates(self):
+        a, b = Ledger("a"), Ledger("b")
+        self.make_report_into(a)
+        self.make_report_into(b)
+        self.make_report_into(b)
+        a.merge_from(b)
+        assert a.analysis_counters["programs_verified"] == 3
+        assert a.analysis_counters["dead-result"] == 3
+        c, d = Ledger("c"), Ledger("d")
+        self.make_report_into(c)
+        self.make_report_into(d)
+        agg = Ledger.merged([c, d])
+        assert agg.analysis_counters["programs_verified"] == 2
+
+    def test_reset_timings_preserves_clear_clears(self):
+        ldg = Ledger("rst")
+        self.make_report_into(ldg)
+        ldg.reset_timings()
+        # settings-like: verification is per capture, not per replay epoch
+        assert ldg.analysis_counters["programs_verified"] == 1
+        ldg.clear()
+        assert ldg.analysis_counters == {}
+
+    def test_coverage_report_section(self):
+        ldg = Ledger("cov")
+        assert "analysis" not in ldg.coverage_report()
+        self.make_report_into(ldg)
+        sec = ldg.coverage_report()["analysis"]
+        assert sec["programs_verified"] == 1 and sec["dead-result"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the dryrun/hloparse cost bridge
+# ---------------------------------------------------------------------------
+
+class TestCostBridge:
+
+    def test_estimates_and_xla_flags_hygiene(self):
+        from repro.analysis.costs import (estimate_op_costs,
+                                          estimate_program_costs)
+        led = Ledger("t_cost")
+
+        @region("MM", ledger=led)
+        def mm(x, y):
+            return x @ y
+
+        x = jnp.ones((16, 16))
+        prog = capture(lambda run, a, b: run(mm, a, b), x, x,
+                       name="cost_test")
+        before = os.environ.get("XLA_FLAGS")
+        c = estimate_op_costs(prog, 0)
+        assert os.environ.get("XLA_FLAGS") == before  # dryrun import leak
+        assert c["flops"] > 0 and c["hbm_bytes"] > 0
+        assert c["bound"] in ("compute", "memory")
+        assert c["roofline_compute_s"] > 0 and c["roofline_memory_s"] > 0
+        total = estimate_program_costs(prog)
+        assert total["flops"] >= c["flops"]
+        assert total["skipped"] == []

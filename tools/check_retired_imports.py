@@ -53,6 +53,23 @@ RULES = (
         "replay_batch_demo is a launch/serve.py driver endpoint; use "
         "RegionProgram.replay_batch or repro.serve (docs/SERVING.md).",
     ),
+    (
+        # the v0 per-function decorator; frozen for its existing callers
+        # (ledger.py defines it, core/__init__ re-exports it, test_core.py
+        # pins its behavior) but closed to NEW importers — new offload
+        # surfaces are Regions, which the static verifier can lint
+        re.compile(r"\boffload_region\b"),
+        {
+            Path("src/repro/core/ledger.py"),
+            Path("src/repro/core/__init__.py"),
+            Path("src/repro/core/regions.py"),
+            Path("tests/test_core.py"),
+            Path("tools/check_retired_imports.py"),
+        },
+        "legacy offload_region reference",
+        "offload_region is frozen; declare a repro.core.regions.Region "
+        "(capturable + verifiable by repro.analysis, docs/ANALYSIS.md).",
+    ),
 )
 
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
