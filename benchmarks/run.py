@@ -127,17 +127,16 @@ def fig6b_overlap(steps: int = 2, grid=(16, 16, 16)):
 
 
 def _scaling_mesh_shape(n: int) -> tuple:
-    """Mesh shape for an n-APU node: near-square 2-D factorization when
-    possible (4 -> 2x2, 8 -> 2x4) to cut surface-to-volume, 1-D
-    otherwise.  FIG_SCALING_MESH=1d forces the 1-D baseline."""
+    """Mesh shape for an n-APU node: the shared near-square 2-D
+    factorization (``repro.launch.mesh.near_square_mesh_shape`` — also
+    the autotuner's mesh-shape axis) to cut surface-to-volume.
+    FIG_SCALING_MESH=1d forces the 1-D baseline."""
     import os
+
+    from repro.launch.mesh import near_square_mesh_shape
     if os.environ.get("FIG_SCALING_MESH", "auto") == "1d":
         return (n,)
-    best = 1
-    for d in range(2, int(n ** 0.5) + 1):
-        if n % d == 0:
-            best = d
-    return (best, n // best) if best > 1 else (n,)
+    return near_square_mesh_shape(n)
 
 
 def fig_scaling(steps: int = 2, grid="8,8,8", policy="unified"):
@@ -711,6 +710,89 @@ def fig_oversub(out_json: str = "artifacts/oversub/fig_oversub.json"):
     return results
 
 
+def fig_tune(out_json: str = "", bench_json: str = "BENCH_pr10.json"):
+    """Global policy autotuner figure + the perf-trajectory gate.
+
+    Runs the ``repro.tune`` search per workload (serve decode traffic,
+    train step, CFD replay, sharded CFD), persists the warm-start
+    profile, and reports the tuned winner's measured FOM against the
+    hand-assembled reference policy each workload names (the paper's
+    managed-dGPU baseline for the replay workloads, the PR-3
+    sequential 1-D slab decomposition for the sharded one).  The gate
+    locks the trajectory in: any tuned winner measurably worse than its
+    reference beyond ``FIG_TUNE_TOL`` (or fewer than 2 strict wins
+    across the suite) exits non-zero, so CI catches a cost model or
+    search regression before it ships.  The canonical machine-readable
+    record lands in ``BENCH_pr10.json`` at the repo root.
+
+    Env knobs: FIG_TUNE_WORKLOADS (csv), FIG_TUNE_TRIALS,
+    FIG_TUNE_STEPS, FIG_TUNE_TOL, FIG_TUNE_PROFILE, FIG_TUNE_MIN_WINS.
+    """
+    from repro.tune.profile import DEFAULT_PROFILE_PATH
+    from repro.tune.tuner import tune_workloads
+    names = [n for n in os.environ.get(
+        "FIG_TUNE_WORKLOADS",
+        "cfd_step,serve_decode,train_step,cfd_sharded").split(",") if n]
+    trials = int(os.environ.get("FIG_TUNE_TRIALS", "2"))
+    steps = int(os.environ.get("FIG_TUNE_STEPS", "0")) or None
+    tol = float(os.environ.get("FIG_TUNE_TOL", "0.25"))
+    min_wins = int(os.environ.get("FIG_TUNE_MIN_WINS",
+                                  str(min(2, len(names)))))
+    prof_path = os.environ.get("FIG_TUNE_PROFILE", DEFAULT_PROFILE_PATH)
+
+    profile, results = tune_workloads(names, trials=trials, steps=steps,
+                                      out=prof_path, gate_tol=None)
+    cells, failures, wins = [], [], 0
+    for res in results:
+        fom, ref = res.fom_s, res.ref_fom_s
+        speedup = (ref / max(fom, 1e-12)) if fom and ref else None
+        strict_win = bool(fom and ref and fom < ref)
+        wins += strict_win
+        if fom and ref and fom > ref * (1.0 + tol):
+            failures.append(f"{res.workload}: tuned {fom:.3e}s vs ref "
+                            f"{ref:.3e}s exceeds tol {tol:g}")
+        cells.append({
+            "workload": res.workload, "bucket": res.bucket,
+            "winner": res.winner.label, "candidate": res.winner.to_dict(),
+            "fom_s": fom, "ref_fom_s": ref, "score_s": res.score_s,
+            "speedup_vs_ref": speedup, "strict_win": strict_win,
+            "disqualified": res.disqualified,
+            "candidates_scored": len(res.table),
+        })
+        row(f"fig_tune/{res.workload}", (fom or 0.0) * 1e6,
+            f"winner={res.winner.label}"
+            + (f";x{speedup:.2f}_vs_ref" if speedup else "")
+            + (";WIN" if strict_win else ""))
+    if wins < min_wins:
+        failures.append(f"only {wins} strict tuned-vs-ref wins, "
+                        f"gate requires >= {min_wins}")
+    gate = {"tol": tol, "min_wins": min_wins, "strict_wins": wins,
+            "ok": not failures, "failures": failures}
+    rec = {
+        "bench": "fig_tune",
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "profile": prof_path,
+        "trials": trials,
+        "workloads": cells,
+        "gate": gate,
+    }
+    for path in (bench_json, out_json):
+        if path:
+            p = Path(path)
+            if p.parent != Path("."):
+                p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(json.dumps(rec, indent=1, default=str) + "\n")
+    print(f"[bench] wrote tuned-vs-ref figure to {bench_json}"
+          f" (profile: {prof_path})", flush=True)
+    row("fig_tune/gate", 0.0,
+        f"wins={wins}/{len(names)};tol={tol:g};"
+        f"{'ok' if gate['ok'] else 'FAIL'}")
+    if failures:
+        raise SystemExit("[fig_tune] perf-trajectory gate failed: "
+                         + "; ".join(failures))
+    return rec
+
+
 def pool_bench(n: int = 200, shape=(1 << 20,)):
     """Umpire pooling (paper §5): alloc+touch latency, pooled vs malloc."""
     from repro.core.pool import HostStagingPool
@@ -868,6 +950,7 @@ BENCHES = {
     "fig_serve": fig_serve,
     "fig_traffic": fig_traffic,
     "fig_oversub": fig_oversub,
+    "fig_tune": fig_tune,
     "pool": pool_bench,
     "dispatch": dispatch_bench,
     "kernel": kernel_bench,

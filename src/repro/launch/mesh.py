@@ -55,6 +55,23 @@ def apu_flags(n_apus: int) -> str:
     return f"--xla_force_host_platform_device_count={n_apus}"
 
 
+def near_square_mesh_shape(n: int) -> tuple:
+    """Near-square 2-D factorization of an APU count: largest divisor
+    ``d <= sqrt(n)`` gives ``(d, n // d)`` — 4 -> (2, 2), 8 -> (2, 4),
+    6 -> (2, 3) — which cuts halo surface-to-volume versus a 1-D slab
+    decomposition (docs/SCALING.md).  Primes (and 1) stay 1-D: ``(n,)``.
+    Shared by ``fig_scaling`` and the policy autotuner's mesh-shape axis
+    (``repro.tune``, docs/AUTOTUNE.md)."""
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"APU count must be >= 1, got {n}")
+    best = 1
+    for d in range(2, int(n ** 0.5) + 1):
+        if n % d == 0:
+            best = d
+    return (best, n // best) if best > 1 else (n,)
+
+
 def parse_mesh_shape(spec) -> tuple:
     """Parse a mesh-shape spec: ``4`` / ``"4"`` -> ``(4,)`` (1-D),
     ``"2x2"`` -> ``(2, 2)``, ``"2x2x2"`` -> ``(2, 2, 2)``.  The CLI

@@ -11,10 +11,15 @@ One place where a CLI ``--policy`` choice plus the config's declarative
   optimizer-offload hint on ``ADAMW_UPDATE``, serve's role-keyed KV
   placer) never bounce scalars across memory spaces;
 * callers may swap in a custom ``placer`` (serve's ``--offload-kv``) or
-  ``selector`` (variant dispatch) — the two axes the drivers expose.
+  ``selector`` (variant dispatch) — the two axes the drivers expose;
+* ``auto`` (:func:`auto_policy`) loads the nearest-bucket winner from
+  the tuned warm-start profile (``repro.tune``, docs/AUTOTUNE.md) and
+  falls back to the hand-assembled ``lm_policy`` when no profile
+  matches.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 from repro.configs.base import MemoryPolicy
@@ -24,8 +29,8 @@ from repro.core.regions import ComposedPolicy, Placer, make_policy
 #: costs more than it saves — paper C4's threshold idea applied to C1)
 PLACER_MIN_BYTES = 4096
 
-#: the CLI surface both drivers expose
-POLICY_CHOICES = ("unified", "discrete", "host", "adaptive")
+#: the CLI surface the drivers expose ("auto" = tuned-profile lookup)
+POLICY_CHOICES = ("unified", "discrete", "host", "adaptive", "auto")
 
 
 def lm_policy(mode: str, memory: Optional[MemoryPolicy] = None, *,
@@ -38,3 +43,46 @@ def lm_policy(mode: str, memory: Optional[MemoryPolicy] = None, *,
     if mode == "adaptive" and memory is not None:
         kw["cutoff"] = memory.target_cutoff
     return make_policy(mode, **kw)
+
+
+def auto_policy(workload: str, size: int,
+                memory: Optional[MemoryPolicy] = None, *,
+                profile_path: Optional[str] = None,
+                placer: Optional[Placer] = None,
+                selector=None, fallback: str = "unified",
+                quiet: bool = False) -> ComposedPolicy:
+    """``--policy auto``: the tuned profile's nearest-bucket winner for
+    ``(workload, size)`` as a runnable ExecutionPolicy.
+
+    ``workload`` names a tuned cell family (``serve_decode`` /
+    ``train_step`` / ``cfd_step`` / ``cfd_sharded`` — docs/AUTOTUNE.md)
+    and ``size`` is that workload's shape measure
+    (``repro.tune.space.serve_size`` etc.), bucketed with the shared
+    power-of-2 scheme.  The profile path resolves ``profile_path`` ->
+    ``$REPRO_TUNE_PROFILE`` -> ``artifacts/tune/policy_profile.json``.
+    No profile, or no entry for the workload -> ``lm_policy(fallback)``,
+    so ``auto`` is always safe to pass.  The returned policy carries
+    ``tuned_entry`` (the ProfileEntry, or None on fallback) so drivers
+    can report what they loaded."""
+    from repro.tune.profile import DEFAULT_PROFILE_PATH, PolicyProfile
+    path = profile_path or os.environ.get("REPRO_TUNE_PROFILE",
+                                          DEFAULT_PROFILE_PATH)
+    prof = PolicyProfile.load_if_exists(path)
+    entry = prof.lookup(workload, size) if prof is not None else None
+    if entry is None:
+        pol = lm_policy(fallback, memory, placer=placer, selector=selector)
+        pol.tuned_entry = None
+        if not quiet:
+            print(f"[auto] no tuned entry for {workload!r} in {path}; "
+                  f"falling back to lm_policy({fallback!r})")
+        return pol
+    pol = entry.candidate.build_policy(
+        memory, winners=entry.variant_winners,
+        placer=placer or Placer(min_bytes=PLACER_MIN_BYTES))
+    if selector is not None:                  # explicit driver axis wins
+        pol.selector = selector
+    pol.tuned_entry = entry
+    if not quiet:
+        print(f"[auto] {workload}: loaded {entry.candidate.label} "
+              f"(cell {entry.key}, profile {path})")
+    return pol

@@ -50,7 +50,12 @@ def parse_args(argv=None):
                     help="cavity grid; extents that don't divide over the "
                          "mesh are padded up to the next multiple")
     ap.add_argument("--policy", default="unified",
-                    choices=("unified", "discrete", "host", "adaptive"))
+                    choices=("unified", "discrete", "host", "adaptive",
+                             "auto"),
+                    help="'auto' loads the tuned cfd_sharded profile "
+                         "entry for this grid (repro.tune) and, where "
+                         "--mesh/--schedule/--halo-multiplier are left "
+                         "at their defaults, adopts the winner's values")
     ap.add_argument("--variant", default="ref",
                     help="implementation variant both replays run under "
                          "(StaticSelector; regions without it fall back "
@@ -103,6 +108,33 @@ def main(argv=None) -> dict:
     from repro.core.regions import Executor, StaticSelector, make_policy
     from repro.core.shard_program import shard_program
     from repro.launch.mesh import make_apu_mesh, parse_mesh_shape
+
+    tuned_cell = None
+    if args.policy == "auto":
+        # tuned warm-start: nearest cfd_sharded profile cell for this
+        # grid; CLI knobs left at their defaults adopt the winner's
+        # values, explicit non-default flags win (imported after the jax
+        # flag dance above — repro.tune's harness imports model code)
+        from repro.launch.policy import auto_policy
+        from repro.tune.space import cfd_size
+        grid_req = tuple(int(g) for g in args.grid.split(","))
+        pol = auto_policy("cfd_sharded", cfd_size(grid_req))
+        tuned = getattr(pol, "tuned_entry", None)
+        args.policy = (tuned.candidate.placement if tuned is not None
+                       else "unified")
+        if tuned is not None:
+            tuned_cell = tuned.key
+            c = tuned.candidate
+            if not args.mesh and c.mesh and len(c.mesh) > 1:
+                prod = 1
+                for m in c.mesh:
+                    prod *= m
+                if prod == args.apus:
+                    args.mesh = "x".join(str(m) for m in c.mesh)
+            if args.schedule == "overlap":
+                args.schedule = c.schedule
+            if args.halo_multiplier == 1:
+                args.halo_multiplier = c.halo_multiplier
 
     mesh_shape = parse_mesh_shape(args.mesh) if args.mesh else (args.apus,)
     n_mesh = 1
@@ -160,6 +192,7 @@ def main(argv=None) -> dict:
         "grid_padded": grid != grid_requested,
         "steps": args.steps,
         "policy": args.policy,
+        "tuned_cell": tuned_cell,
         "variant": args.variant,
         "schedule": args.schedule,
         "halo_multiplier": args.halo_multiplier,

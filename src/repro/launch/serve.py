@@ -41,7 +41,7 @@ import numpy as np
 from repro.configs.reduced import reduced as make_reduced
 from repro.configs.registry import get_config
 from repro.core.ledger import Ledger
-from repro.core.program import capture
+from repro.core.program import AsyncExecutor, capture
 from repro.core.regions import Executor, Placer, UnifiedPolicy, region
 from repro.core.umem import MemSpace, preferred_host_space, tree_place
 from repro.launch import sharding as SH
@@ -491,8 +491,23 @@ def main(argv=None):
     mesh = make_smoke_mesh((args.mesh, 1)) if args.mesh else make_smoke_mesh()
     max_len = args.prompt_len + args.gen
     placer = offload_kv_cache() if args.offload_kv else None
-    ex = Executor(lm_policy(args.policy, cfg.memory, placer=placer),
-                  Ledger("serve"))
+    if args.policy == "auto":
+        # tuned warm-start: the profile's serve_decode winner for this
+        # request shape (lazy import — repro.tune pulls this driver back
+        # in for its workload harness)
+        from repro.launch.policy import auto_policy
+        from repro.tune.space import serve_size
+        pol = auto_policy("serve_decode",
+                          serve_size(args.batch, max_len, cfg.d_model),
+                          cfg.memory, placer=placer)
+        entry = getattr(pol, "tuned_entry", None)
+        if entry is not None and entry.candidate.staging == "async":
+            ex = AsyncExecutor(pol, Ledger("serve"))
+        else:
+            ex = Executor(pol, Ledger("serve"))
+    else:
+        ex = Executor(lm_policy(args.policy, cfg.memory, placer=placer),
+                      Ledger("serve"))
     key = jax.random.PRNGKey(args.seed)
     params = T.init(key, cfg)
     if args.engine:

@@ -50,7 +50,7 @@ from repro.train import step as S
 def build_trainer(cfg: ModelConfig, mesh, *, lr=3e-4, offload_optimizer=False,
                   q_chunk=512, seed=0, policy: str = "unified",
                   executor: Optional[Executor] = None,
-                  verify: bool = False):
+                  verify: bool = False, tuned_size: Optional[int] = None):
     """Returns ``(init_fn, capture_fn, ex)``.
 
     ``init_fn() -> state`` builds sharded params + optimizer state.
@@ -77,7 +77,23 @@ def build_trainer(cfg: ModelConfig, mesh, *, lr=3e-4, offload_optimizer=False,
     specs = T.param_specs(cfg)
     psh = SH.tree_param_shardings(specs, mesh, rules)
 
-    ex = executor or Executor(lm_policy(policy, cfg.memory), Ledger("train"))
+    if executor is not None:
+        ex = executor
+    elif policy == "auto":
+        # tuned warm-start: profile's train_step winner at this workload
+        # size (``repro.tune.space.train_size``); with no ``tuned_size``
+        # the nearest calibrated bucket still resolves (lazy import —
+        # repro.tune's workload harness imports this driver back)
+        from repro.core.program import AsyncExecutor
+        from repro.launch.policy import auto_policy
+        pol = auto_policy("train_step", tuned_size or 0, cfg.memory)
+        entry = getattr(pol, "tuned_entry", None)
+        led = Ledger("train")
+        ex = (AsyncExecutor(pol, led)
+              if entry is not None and entry.candidate.staging == "async"
+              else Executor(pol, led))
+    else:
+        ex = Executor(lm_policy(policy, cfg.memory), Ledger("train"))
     make_ctx = lambda: T.Ctx(mode="train", shd=shd, q_chunk=q_chunk)
     regions = S.make_train_regions(cfg, opt_cfg, make_ctx, ledger=ex.ledger,
                                    offload_optimizer=offload_optimizer)
@@ -151,10 +167,14 @@ def main(argv=None):
     if args.reduced:
         cfg = make_reduced(cfg)
     mesh = make_smoke_mesh()
+    tuned_size = None
+    if args.policy == "auto":
+        from repro.tune.space import train_size
+        tuned_size = train_size(args.batch, args.seq, cfg.d_model)
     init_fn, capture_fn, ex = build_trainer(
         cfg, mesh, lr=args.lr, offload_optimizer=args.offload_optimizer,
         q_chunk=min(512, args.seq), seed=args.seed, policy=args.policy,
-        verify=args.verify)
+        verify=args.verify, tuned_size=tuned_size)
     src = make_source(args.data, cfg.vocab, path=args.data_path,
                       seed=args.seed)
 

@@ -20,10 +20,23 @@ memory decodes by paying per-token expert fetches instead of OOMing.
 Compute order is fixed (ascending expert id, f32 accumulate), so the
 budgeted run is bit-identical to the everything-resident run — placement
 never changes values.
+
+The pager also runs a one-slab staging lookahead mirroring
+:class:`~repro.core.program.AsyncExecutor`: while expert ``i`` computes,
+a single background thread fetches expert ``i+1``'s slab
+(:meth:`ExpertPager.prefetch`), and the fetch-behind-compute overlap is
+accounted with the same :func:`~repro.core.program.interval_overlap`
+arithmetic the async executor uses (``stats.prefetch_overlap_s``, plus
+the ``moe_prefetch_overlap_s`` ledger gauge when a ledger is passed).
+Prefetch changes *when* a slab moves, never *what* is computed — the
+bit-parity claim above is untouched.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Optional
 
 import jax
@@ -32,6 +45,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core import umem
+from repro.core.program import interval_overlap
 from repro.core.umem import MemSpace
 from repro.models.layers import ParamSpec, noshard
 
@@ -198,6 +212,8 @@ class PagingStats:
     hits: int = 0                   # expert already device-resident
     evictions: int = 0              # LRU slabs dropped to fit the budget
     bytes_fetched: int = 0
+    prefetch_hits: int = 0          # fetches satisfied by the lookahead
+    prefetch_overlap_s: float = 0.0  # fetch time hidden behind compute
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -220,7 +236,8 @@ class ExpertPager:
     resident run — is what the tests assert."""
 
     def __init__(self, p, cfg: ModelConfig, budget=None,
-                 host_space: Optional[MemSpace] = None):
+                 host_space: Optional[MemSpace] = None,
+                 lookahead: bool = True):
         m = cfg.moe
         self.n_experts = m.n_experts
         self.budget = budget
@@ -232,6 +249,10 @@ class ExpertPager:
         self.slab_bytes = sum(int(p[k][0].nbytes) for k in EXPERT_KEYS)
         self._resident: Dict[int, dict] = {}   # expert id -> slab (LRU order)
         self.stats = PagingStats()
+        self.lookahead = lookahead
+        self._lock = threading.Lock()
+        self._pending: Dict[int, object] = {}  # expert id -> Future
+        self._pf_pool = None                   # created on first prefetch
 
     @property
     def footprint_bytes(self) -> int:
@@ -243,41 +264,88 @@ class ExpertPager:
     def resident_bytes(self) -> int:
         return self.slab_bytes * len(self._resident)
 
-    def get(self, e: int) -> dict:
-        """The device-resident slab of expert ``e``, fetching and evicting
-        as the budget requires."""
-        e = int(e)
-        slab = self._resident.pop(e, None)
-        if slab is not None:
-            self._resident[e] = slab           # re-insert = LRU touch
-            self.stats.hits += 1
-            return slab
+    def _fetch_slab(self, e: int) -> tuple:
+        """Page expert ``e`` device-ward; returns (slab, t0, t1) with the
+        materialized fetch interval (the span overlap accounting uses)."""
+        t0 = time.perf_counter()
         slab = {k: umem.place(self._host[k][e], MemSpace.DEVICE)
                 for k in EXPERT_KEYS}
-        self._resident[e] = slab
-        self.stats.fetches += 1
-        self.stats.bytes_fetched += self.slab_bytes
-        if self.budget is not None:
-            self.budget.charge(self.slab_bytes)
-            # shed LRU slabs until we fit again — but never the slab the
-            # caller is about to compute with
-            while self.budget.over and len(self._resident) > 1:
-                victim = next(iter(self._resident))
-                if victim == e:
-                    break
-                self._resident.pop(victim)
-                self.budget.release(self.slab_bytes)
-                self.stats.evictions += 1
+        for v in slab.values():
+            jax.block_until_ready(v)
+        return slab, t0, time.perf_counter()
+
+    def prefetch(self, e: int) -> None:
+        """Hint that expert ``e`` is needed next: start fetching its slab
+        on the single staging thread while the caller computes the current
+        expert (one-step lookahead — AsyncExecutor's contract applied to
+        expert slabs).  No-op when the slab is resident, already in
+        flight, or ``lookahead`` is off.  Budget charging and eviction
+        happen when :meth:`get` installs the slab, so the one in-flight
+        slab is the only budget slack the lookahead adds — the same
+        next-bank allowance AsyncExecutor's double buffer carries."""
+        e = int(e)
+        if not self.lookahead:
+            return
+        with self._lock:
+            if e in self._resident or e in self._pending:
+                return
+            if self._pf_pool is None:
+                self._pf_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="expert-prefetch")
+            self._pending[e] = self._pf_pool.submit(self._fetch_slab, e)
+
+    def get(self, e: int, compute_spans=None) -> dict:
+        """The device-resident slab of expert ``e``, fetching and evicting
+        as the budget requires.  A slab arriving via :meth:`prefetch`
+        still counts as a fetch (the bytes moved); the time its fetch hid
+        behind the caller's ``compute_spans`` intervals accrues to
+        ``stats.prefetch_overlap_s``."""
+        e = int(e)
+        with self._lock:
+            slab = self._resident.pop(e, None)
+            if slab is not None:
+                self._resident[e] = slab       # re-insert = LRU touch
+                self.stats.hits += 1
+                return slab
+            fut = self._pending.pop(e, None)
+        if fut is not None:
+            slab, t0, t1 = fut.result()
+            self.stats.prefetch_hits += 1
+            if compute_spans:
+                self.stats.prefetch_overlap_s += interval_overlap(
+                    t0, t1, compute_spans)
+        else:
+            slab, _, _ = self._fetch_slab(e)
+        with self._lock:
+            self._resident[e] = slab
+            self.stats.fetches += 1
+            self.stats.bytes_fetched += self.slab_bytes
+            if self.budget is not None:
+                self.budget.charge(self.slab_bytes)
+                # shed LRU slabs until we fit again — but never the slab
+                # the caller is about to compute with
+                while self.budget.over and len(self._resident) > 1:
+                    victim = next(iter(self._resident))
+                    if victim == e:
+                        break
+                    self._resident.pop(victim)
+                    self.budget.release(self.slab_bytes)
+                    self.stats.evictions += 1
         return slab
 
     def drop(self) -> None:
         """Release the whole resident set (end of a decode stream)."""
+        with self._lock:
+            pending = list(self._pending.values())
+            self._pending.clear()
+        for fut in pending:
+            fut.cancel()                       # running fetches just expire
         if self.budget is not None:
             self.budget.release(self.resident_bytes)
         self._resident.clear()
 
 
-def moe_decode_paged(pager: ExpertPager, x, cfg: ModelConfig):
+def moe_decode_paged(pager: ExpertPager, x, cfg: ModelConfig, ledger=None):
     """x [B, S, d] -> (y [B, S, d], aux_loss), computing only the experts
     the router selects, each through :meth:`ExpertPager.get`.
 
@@ -286,7 +354,14 @@ def moe_decode_paged(pager: ExpertPager, x, cfg: ModelConfig):
     accumulate, per-token gate mask — so the output is a pure function of
     the values, not of which slabs happened to be resident: budgeted and
     unbudgeted runs are bit-identical.  Matches ``moe_ref`` to tolerance
-    (its lane order differs), which the tests also pin."""
+    (its lane order differs), which the tests also pin.
+
+    Before computing expert ``i`` the loop prefetches expert ``i+1``
+    (ascending order is fixed, so the lookahead is exact, not a guess);
+    each expert's compute interval is recorded so the pager can account
+    how much of the next fetch hid behind it.  With a ``ledger``, the
+    cumulative hidden time lands on the ``moe_prefetch_overlap_s``
+    gauge."""
     m = cfg.moe
     B, S, d = x.shape
     x2 = x.reshape(-1, d)
@@ -294,15 +369,28 @@ def moe_decode_paged(pager: ExpertPager, x, cfg: ModelConfig):
     gate_np = np.asarray(gate)                 # [T,k] f32
     idx_np = np.asarray(idx)                   # [T,k]
     y = jnp.zeros((B * S, d), jnp.float32)
-    for e in sorted({int(v) for v in idx_np.ravel()}):
-        w = pager.get(e)
+    experts = sorted({int(v) for v in idx_np.ravel()})
+    hits0 = pager.stats.prefetch_hits
+    spans = []                       # compute intervals the fetches hide in
+    for i, e in enumerate(experts):
+        if i + 1 < len(experts):
+            pager.prefetch(experts[i + 1])
+        w = pager.get(e, compute_spans=spans)
+        t0 = time.perf_counter()
         we = jnp.asarray((gate_np * (idx_np == e)).sum(-1), jnp.float32)
         g = jnp.einsum("td,df->tf", x2, w["wi_gate"])
         u = jnp.einsum("td,df->tf", x2, w["wi_up"])
         o = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
         o = jnp.einsum("tf,fd->td", o, w["wo"])
-        y = y + o.astype(jnp.float32) * we[:, None]
+        y = jax.block_until_ready(y + o.astype(jnp.float32) * we[:, None])
+        spans.append((t0, time.perf_counter()))
     y = y.astype(x.dtype).reshape(B, S, d)
+    if ledger is not None:
+        ledger.serve_gauge("moe_prefetch_overlap_s",
+                           pager.stats.prefetch_overlap_s)
+        new_hits = pager.stats.prefetch_hits - hits0
+        if new_hits:
+            ledger.serve_record("moe_prefetch_hit", new_hits)
     if m.shared_expert_ff and pager.shared is not None:
         sp = pager.shared
         sg = jnp.einsum("btd,df->btf", x, sp["wi_gate"])

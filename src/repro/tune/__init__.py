@@ -1,0 +1,28 @@
+"""Offline global policy autotuner (ROADMAP item 5, docs/AUTOTUNE.md).
+
+The paper's central claim is that unified memory lets the *runtime
+policy* — not the programmer — decide where data lives and code runs.
+``repro.tune`` closes the loop: profile a captured RegionProgram once
+through the PR-9 roofline cost model (``repro.analysis.costs``), correct
+the model with a measured calibration replay (per-region residuals),
+search the whole policy space — placement x routing-cutoff x staging x
+selector x mesh-shape — per workload-shape bucket, and persist the
+winners to a versioned warm-start profile that ``serve`` / ``train`` /
+``scaling`` load with ``--policy auto``.
+
+  PYTHONPATH=src python -m repro.tune --workloads cfd_step,serve_decode \
+      --trials 3 --out artifacts/tune/policy_profile.json
+"""
+from repro.tune.profile import (DEFAULT_PROFILE_PATH, PROFILE_VERSION,
+                                PolicyProfile, ProfileEntry)
+from repro.tune.space import (PolicyCandidate, cfd_size,
+                              enumerate_candidates, serve_size, train_size)
+from repro.tune.tuner import TuneResult, tune, tune_workloads
+from repro.tune.workloads import WORKLOAD_NAMES, Workload, get_workload
+
+__all__ = [
+    "DEFAULT_PROFILE_PATH", "PROFILE_VERSION", "PolicyProfile",
+    "ProfileEntry", "PolicyCandidate", "enumerate_candidates",
+    "serve_size", "train_size", "cfd_size", "TuneResult", "tune",
+    "tune_workloads", "WORKLOAD_NAMES", "Workload", "get_workload",
+]

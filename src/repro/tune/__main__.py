@@ -1,0 +1,68 @@
+"""CLI: search the policy space and persist the warm-start profile.
+
+  PYTHONPATH=src python -m repro.tune \
+      --workloads cfd_step,serve_decode --trials 3 \
+      --out artifacts/tune/policy_profile.json
+
+``--gate`` arms the tuned-vs-ref regression check (exit non-zero when a
+measured winner is worse than its hand-assembled reference beyond
+``--tol``) — the CI smoke runs it on the serve decode + CFD programs at
+reduced trial counts (docs/AUTOTUNE.md).
+"""
+from __future__ import annotations
+
+import argparse
+import warnings
+
+warnings.filterwarnings("ignore")
+
+
+def main(argv=None):
+    from repro.tune.profile import DEFAULT_PROFILE_PATH
+    from repro.tune.tuner import tune_workloads
+    from repro.tune.workloads import WORKLOAD_NAMES
+
+    ap = argparse.ArgumentParser(prog="python -m repro.tune")
+    ap.add_argument("--workloads", default="cfd_step,serve_decode",
+                    help=f"comma list from {','.join(WORKLOAD_NAMES)}")
+    ap.add_argument("--trials", type=int, default=3,
+                    help="measured finalists per workload (0 = pure "
+                         "cost-model ranking, requires a prior profile's "
+                         "residuals)")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="replays per measurement (0 = workload default)")
+    ap.add_argument("--out", default=DEFAULT_PROFILE_PATH,
+                    help="profile JSON to write")
+    ap.add_argument("--winners",
+                    default="artifacts/variants/autotune_winners.json",
+                    help="AutotuneSelector cells for the 'autotuned' "
+                         "selector axis (fig_variants artifact)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail when a measured winner is worse than its "
+                         "reference beyond --tol")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="gate tolerance (fractional)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    names = [n for n in args.workloads.split(",") if n]
+    profile, results = tune_workloads(
+        names, trials=args.trials, steps=args.steps or None, out=args.out,
+        winners_path=args.winners,
+        gate_tol=args.tol if args.gate else None, seed=args.seed)
+    for res in results:
+        speed = ""
+        if res.fom_s is not None and res.ref_fom_s:
+            speed = f" (x{res.ref_fom_s / max(res.fom_s, 1e-12):.2f} vs ref)"
+        print(f"[tune] {res.workload}|2^{res.bucket}: {res.winner.label}"
+              f"{speed}  score={res.score_s:.3e}s"
+              + (f" fom={res.fom_s:.3e}s" if res.fom_s is not None else "")
+              + (f" DISQUALIFIED={len(res.disqualified)}"
+                 if res.disqualified else ""))
+    print(f"[tune] wrote {len(profile.entries)} entr"
+          f"{'y' if len(profile.entries) == 1 else 'ies'} to {args.out}")
+    return profile
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""The persisted warm-start profile: tuned winners per (workload, bucket).
+
+``artifacts/tune/policy_profile.json`` generalizes
+``artifacts/variants/autotune_winners.json``: where the variants file
+held per-(region, target, bucket) *implementation* winners, a profile
+entry holds the whole winning :class:`~repro.tune.space.PolicyCandidate`
+— placement, cutoff, staging, selector (with its variant-winner cells
+carried along), and mesh/schedule for sharded workloads — plus the
+measured FOMs and the model-vs-measured residuals the search used.
+
+Entries are keyed ``"{workload}|2^{bucket}"`` on the existing
+power-of-2 size-bucket scheme (``repro.core.regions.size_bucket``:
+bucket ``b`` covers sizes in ``[2^(b-1), 2^b)``).  :meth:`lookup` falls
+back to the nearest calibrated bucket of the same workload — the same
+fallback contract ``AutotuneSelector`` uses per region — and returns
+``None`` for unknown workloads so callers (``--policy auto``) can fall
+back to the hand-assembled ``lm_policy``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.core.regions import size_bucket
+from repro.tune.space import PolicyCandidate
+
+#: bump on any schema change; load() refuses mismatched profiles rather
+#: than silently building the wrong policy from stale fields
+PROFILE_VERSION = 1
+
+#: where the drivers look (override: REPRO_TUNE_PROFILE / --profile)
+DEFAULT_PROFILE_PATH = "artifacts/tune/policy_profile.json"
+
+
+def entry_key(workload: str, bucket: int) -> str:
+    return f"{workload}|2^{int(bucket)}"
+
+
+@dataclasses.dataclass
+class ProfileEntry:
+    """One tuned cell: the winning candidate for a workload-shape bucket."""
+    workload: str
+    bucket: int
+    candidate: PolicyCandidate
+    fom_s: Optional[float] = None        # measured winner FOM (s/unit)
+    ref_fom_s: Optional[float] = None    # measured hand-assembled baseline
+    score_s: Optional[float] = None      # cost-model prediction for winner
+    residuals: Dict[str, float] = dataclasses.field(default_factory=dict)
+    variant_winners: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def key(self) -> str:
+        return entry_key(self.workload, self.bucket)
+
+    def to_dict(self) -> dict:
+        return {
+            "workload": self.workload,
+            "bucket": self.bucket,
+            "candidate": self.candidate.to_dict(),
+            "fom_s": self.fom_s,
+            "ref_fom_s": self.ref_fom_s,
+            "score_s": self.score_s,
+            "residuals": dict(self.residuals),
+            "variant_winners": dict(self.variant_winners),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ProfileEntry":
+        return cls(workload=d["workload"], bucket=int(d["bucket"]),
+                   candidate=PolicyCandidate.from_dict(d["candidate"]),
+                   fom_s=d.get("fom_s"), ref_fom_s=d.get("ref_fom_s"),
+                   score_s=d.get("score_s"),
+                   residuals=dict(d.get("residuals") or {}),
+                   variant_winners=dict(d.get("variant_winners") or {}))
+
+
+class PolicyProfile:
+    """A versioned set of :class:`ProfileEntry` cells with nearest-bucket
+    lookup and JSON persistence."""
+
+    def __init__(self, entries: Optional[Dict[str, ProfileEntry]] = None):
+        self.entries: Dict[str, ProfileEntry] = dict(entries or {})
+
+    def add(self, entry: ProfileEntry) -> None:
+        self.entries[entry.key] = entry
+
+    def lookup(self, workload: str, size: int) -> Optional[ProfileEntry]:
+        """The entry for ``workload`` at the bucket of ``size``, or the
+        nearest calibrated bucket of the same workload (smaller bucket
+        wins a distance tie, matching AutotuneSelector), or ``None``."""
+        b = size_bucket(size)
+        exact = self.entries.get(entry_key(workload, b))
+        if exact is not None:
+            return exact
+        near = [(abs(e.bucket - b), e.bucket, k)
+                for k, e in self.entries.items() if e.workload == workload]
+        if not near:
+            return None
+        return self.entries[min(near)[2]]
+
+    def workloads(self) -> list:
+        return sorted({e.workload for e in self.entries.values()})
+
+    def to_dict(self) -> dict:
+        return {
+            "version": PROFILE_VERSION,
+            "bucket_model": "b covers sizes in [2^(b-1), 2^b)",
+            "entries": {k: e.to_dict()
+                        for k, e in sorted(self.entries.items())},
+        }
+
+    def save(self, path=DEFAULT_PROFILE_PATH) -> Path:
+        out = Path(path)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(self.to_dict(), indent=1, sort_keys=True))
+        return out
+
+    @classmethod
+    def load(cls, path=DEFAULT_PROFILE_PATH) -> "PolicyProfile":
+        d = json.loads(Path(path).read_text())
+        ver = d.get("version")
+        if ver != PROFILE_VERSION:
+            raise ValueError(
+                f"profile {path} is version {ver!r}, this build reads "
+                f"{PROFILE_VERSION}; re-run `python -m repro.tune`")
+        return cls({k: ProfileEntry.from_dict(e)
+                    for k, e in d.get("entries", {}).items()})
+
+    @classmethod
+    def load_if_exists(cls, path=DEFAULT_PROFILE_PATH):
+        """``load`` that treats a missing file as "no profile" (None) —
+        the ``--policy auto`` startup path; schema mismatches still
+        raise."""
+        p = Path(path)
+        if not p.exists():
+            return None
+        return cls.load(p)

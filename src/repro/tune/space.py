@@ -1,0 +1,175 @@
+"""The policy search space: one candidate = one point on every axis.
+
+A :class:`PolicyCandidate` is the serializable coordinate the tuner
+searches over and the profile persists — placement (which
+``ComposedPolicy``), routing cutoff (``TARGET_CUT_OFF`` for adaptive),
+staging mode (sync Executor vs async double-buffered replay), selector
+(ref / pallas / autotuned variant dispatch), and — for sharded
+workloads — the exchange schedule, wide-halo depth, and mesh shape.
+:meth:`PolicyCandidate.build_policy` turns the coordinate back into the
+exact ``ExecutionPolicy`` the regions spine executes, so a profile entry
+round-trips to runnable policy with no driver-side interpretation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core.regions import (DEFAULT_CUTOFF, AutotuneSelector,
+                                ComposedPolicy, Placer, StaticSelector,
+                                make_policy)
+
+#: routing cutoffs the adaptive axis tries (elements) — DEFAULT_CUTOFF is
+#: the paper's empirical TARGET_CUT_OFF, bracketed one bucket either side
+CUTOFF_LADDER = (4096, DEFAULT_CUTOFF, 65536)
+
+#: variant-selection axis (docs/VARIANTS.md): one implementation
+#: everywhere, or the calibrated per-(region, target, bucket) winners
+SELECTOR_CHOICES = ("ref", "pallas", "autotuned")
+
+
+def parse_winner_key(key: str) -> Tuple[str, str, int]:
+    """``"region|target|2^b"`` (the fig_variants / profile JSON cell
+    format) -> ``(region, target, bucket)``."""
+    region, target, cell = key.rsplit("|", 2)
+    if not cell.startswith("2^"):
+        raise ValueError(f"bad winner cell {key!r}: want region|target|2^b")
+    return region, target, int(cell[2:])
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyCandidate:
+    """One point in the policy space (hashable, JSON round-trippable)."""
+    placement: str = "unified"        # unified | discrete | host | adaptive
+    cutoff: Optional[int] = None      # TARGET_CUT_OFF (adaptive only)
+    selector: str = "ref"             # ref | pallas | autotuned
+    staging: str = "sync"             # sync | async (AsyncExecutor replay)
+    schedule: str = "overlap"         # sharded: overlap|sequential|split
+    halo_multiplier: int = 1          # sharded: k-wide ghosts, 1/k syncs
+    mesh: Optional[Tuple[int, ...]] = None   # sharded mesh shape
+
+    @property
+    def label(self) -> str:
+        bits = [self.placement]
+        if self.placement == "adaptive" and self.cutoff:
+            bits[-1] += f"@{self.cutoff}"
+        if self.staging != "sync":
+            bits.append(self.staging)
+        bits.append(self.selector)
+        if self.mesh is not None:
+            bits.append("x".join(str(s) for s in self.mesh))
+            bits.append(f"{self.schedule}/h{self.halo_multiplier}")
+        return "+".join(bits)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.mesh is not None:
+            d["mesh"] = list(self.mesh)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PolicyCandidate":
+        kw = dict(d)
+        if kw.get("mesh") is not None:
+            kw["mesh"] = tuple(int(s) for s in kw["mesh"])
+        if kw.get("cutoff") is not None:
+            kw["cutoff"] = int(kw["cutoff"])
+        return cls(**kw)
+
+    def make_selector(self, winners: Optional[Dict[str, str]] = None):
+        """The candidate's selection axis.  ``winners`` is the persisted
+        ``{"region|target|2^b": impl}`` cell map (the generalization of
+        ``artifacts/variants/autotune_winners.json``); an ``autotuned``
+        candidate without winners degrades to the ref fallback —
+        exactly what an uncalibrated AutotuneSelector does."""
+        if self.selector == "autotuned":
+            sel = AutotuneSelector()
+            for key, win in (winners or {}).items():
+                sel.winners[parse_winner_key(key)] = win
+            return sel
+        return StaticSelector(self.selector)
+
+    def build_policy(self, memory=None, *,
+                     winners: Optional[Dict[str, str]] = None,
+                     placer: Optional[Placer] = None) -> ComposedPolicy:
+        """The concrete ExecutionPolicy this coordinate names.
+        ``memory`` (a ``MemoryPolicy``) supplies the adaptive cutoff when
+        the candidate doesn't pin one — same precedence as
+        ``lm_policy``."""
+        kw = {}
+        if placer is not None:
+            kw["placer"] = placer
+        if self.placement == "adaptive":
+            cut = self.cutoff
+            if cut is None and memory is not None:
+                cut = memory.target_cutoff
+            if cut is not None:
+                kw["cutoff"] = int(cut)
+        pol = make_policy(self.placement, **kw)
+        pol.selector = self.make_selector(winners)
+        return pol
+
+
+def enumerate_candidates(kind: str = "replay", *, apus: int = 4,
+                         cutoffs=CUTOFF_LADDER,
+                         selectors=SELECTOR_CHOICES) -> list:
+    """The deterministic candidate list the tuner scores, in a fixed
+    order (ties in the cost model resolve to the earlier candidate, so
+    same inputs always elect the same winner).
+
+    ``replay`` workloads vary placement x cutoff x selector x staging
+    (async staging only where it means anything — the discrete stager);
+    ``sharded`` workloads vary schedule x halo depth x mesh shape (1-D
+    slab vs the shared near-square factorization) under unified
+    placement, the regime docs/SCALING.md measures."""
+    out = []
+    if kind == "replay":
+        for placement in ("unified", "adaptive", "discrete", "host"):
+            cuts = cutoffs if placement == "adaptive" else (None,)
+            stagings = ("sync", "async") if placement == "discrete" \
+                else ("sync",)
+            for cut in cuts:
+                for staging in stagings:
+                    for sel in selectors:
+                        out.append(PolicyCandidate(
+                            placement=placement, cutoff=cut, selector=sel,
+                            staging=staging))
+    elif kind == "sharded":
+        from repro.launch.mesh import near_square_mesh_shape
+        meshes = [(apus,)]
+        sq = near_square_mesh_shape(apus)
+        if sq not in meshes:
+            meshes.append(sq)
+        for mesh in meshes:
+            for schedule in ("sequential", "overlap", "split"):
+                for halo in (1, 2):
+                    out.append(PolicyCandidate(
+                        placement="unified", schedule=schedule,
+                        halo_multiplier=halo, mesh=mesh))
+    else:
+        raise ValueError(f"unknown workload kind {kind!r}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Workload size measures — the bucket key drivers and tuner must agree on
+# ---------------------------------------------------------------------------
+
+def serve_size(batch: int, max_len: int, d_model: int) -> int:
+    """Serve-workload size: decode activation elements (batch x max_len
+    x d_model) — what the KV working set and per-step matmuls scale
+    with."""
+    return int(batch) * int(max_len) * int(d_model)
+
+
+def train_size(batch: int, seq: int, d_model: int) -> int:
+    """Train-workload size: step activation elements."""
+    return int(batch) * int(seq) * int(d_model)
+
+
+def cfd_size(grid) -> int:
+    """CFD-workload size: cells in the grid."""
+    n = 1
+    for g in grid:
+        n *= int(g)
+    return n

@@ -243,6 +243,52 @@ def _slab_bytes(s):
     return sum(int(s["p"][k][0].nbytes) for k in M.EXPERT_KEYS)
 
 
+def test_moe_prefetch_parity_and_overlap(moe_setup):
+    """The one-step slab lookahead (AsyncExecutor's contract applied to
+    expert paging): identical fetch/hit/eviction accounting and
+    bit-identical outputs vs the lookahead-off pager, with the hidden
+    fetch time surfaced on the pager stats and the ledger gauge."""
+    s = moe_setup
+    led = Ledger("serve")
+    pon = M.ExpertPager(s["p"], s["cfg"])            # lookahead default on
+    poff = M.ExpertPager(s["p"], s["cfg"], lookahead=False)
+    for x in s["xs"]:
+        y1, _ = M.moe_decode_paged(pon, x, s["cfg"], ledger=led)
+        y0, _ = M.moe_decode_paged(poff, x, s["cfg"])
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y0))
+    on, off = pon.stats, poff.stats
+    # prefetch moves the same bytes at a different time — the paging
+    # ledger cannot tell the difference
+    assert (on.fetches, on.hits, on.evictions, on.bytes_fetched) == \
+        (off.fetches, off.hits, off.evictions, off.bytes_fetched)
+    assert on.prefetch_hits > 0 and off.prefetch_hits == 0
+    assert on.prefetch_overlap_s >= 0.0
+    assert "moe_prefetch_overlap_s" in led.serve_gauges
+    assert led.serve_counters.get("moe_prefetch_hit") == on.prefetch_hits
+    pon.drop()
+    assert not pon._pending and not pon._resident
+
+
+def test_moe_prefetch_budgeted_charges_on_install(moe_setup):
+    """A prefetched slab only hits the MemoryBudget when get() installs
+    it, so the budget invariants (and evictions) are unchanged by the
+    lookahead."""
+    s = moe_setup
+    budget = MemoryBudget(2 * _slab_bytes(s))
+    pager = M.ExpertPager(s["p"], s["cfg"], budget=budget)
+    ys = []
+    for x in s["xs"]:
+        y, _ = M.moe_decode_paged(pager, x, s["cfg"])
+        assert pager.resident_bytes <= budget.limit_bytes
+        ys.append(np.asarray(y))
+    ref, refs = _paged_stream(s, None)
+    for a, b in zip(refs, ys):
+        np.testing.assert_array_equal(a, b)
+    assert pager.stats.evictions > 0             # the budget really bound
+    pager.drop()
+    assert budget.stats.charged_bytes == 0
+
+
 # ---------------------------------------------------------------------------
 # Workload (c): CFD grids beyond device capacity via budgeted staged replay
 # ---------------------------------------------------------------------------
